@@ -1,0 +1,59 @@
+"""Device-kernel + serving throughput benchmarks (CSV rows)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HABF, BloomFilter
+from repro.core.datasets import make_dataset
+
+
+def kernel_throughput(scale=0.01, seed=0, n_query=200_000):
+    """Pallas (interpret) vs pure-jnp ref vs host numpy, keys/s.
+
+    NOTE: on this CPU container the Pallas kernel runs in interpret mode —
+    the number demonstrates correctness plumbing, not TPU performance; the
+    jnp ref path is the portable production fallback."""
+    import jax
+    from repro.kernels import habf_query_u64, bloom_query_u64
+
+    rows = []
+    ds = make_dataset("shalla", scale, seed)
+    h = HABF.build(ds.pos_u64, ds.neg_u64, None,
+                   total_bytes=ds.n_pos * 10 // 8, k=3, seed=seed)
+    rng = np.random.default_rng(seed)
+    q = rng.choice(np.concatenate([ds.pos_u64, ds.neg_u64]), n_query)
+
+    def bench(fn, name):
+        fn()  # compile/warm
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn()) if name != "host" else fn()
+        dt = time.perf_counter() - t0
+        rows.append((f"kernel_{name}", dt / n_query * 1e6,
+                     f"keys_per_s={n_query / dt:.3g}"))
+
+    bench(lambda: h.query(q), "host")
+    bench(lambda: habf_query_u64(h, q, use_kernel=False), "habf_jnp_ref")
+    bench(lambda: habf_query_u64(h, q, use_kernel=True), "habf_pallas_interp")
+    bf = h.bf
+    bench(lambda: bloom_query_u64(bf, q, use_kernel=False), "bloom_jnp_ref")
+    bench(lambda: bloom_query_u64(bf, q, use_kernel=True),
+          "bloom_pallas_interp")
+    return rows
+
+
+def serving_throughput(seed=0):
+    from repro.launch.serve import run
+    out = run(arch="qwen3-0.6b", reduced=True, batch=8, prompt_len=48,
+              gen=16, seed=seed)
+    fs = out["filter_stats"]
+    return [
+        ("serve_tokens_per_s", 1e6 / max(out["tokens_per_s"], 1e-9),
+         f"tokens_per_s={out['tokens_per_s']:.1f}"),
+        ("serve_admission", 0.0,
+         f"admitted={out['admitted']}/{out['batch']}"),
+        ("serve_filter_habf_vs_bf", 0.0,
+         f"habf_wfpr={fs['habf_weighted_fpr']:.2e};"
+         f"bf_wfpr={fs['bf_weighted_fpr']:.2e}"),
+    ]

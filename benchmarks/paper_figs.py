@@ -1,0 +1,272 @@
+"""One benchmark per paper table/figure (§V), CSV rows
+(name, us_per_call, derived).  Dataset sizes scale with --scale; the
+defaults keep the whole suite CPU-friendly while preserving every
+qualitative claim (HABF < f-HABF < baselines on weighted FPR, etc.)."""
+from __future__ import annotations
+
+import time
+import tracemalloc
+
+import numpy as np
+
+from repro.core import (HABF, HABFConfig, BloomFilter, DoubleHashBloomFilter,
+                        WeightedBloomFilter, optimal_k, weighted_fpr,
+                        xor_filter_for_space, zipf_costs, theory)
+from repro.core.datasets import make_dataset
+from repro.core import hashing
+
+
+def _bits_total(n_pos: int, bpk: float) -> int:
+    return int(n_pos * bpk / 8)
+
+
+def _time_per_key(fn, n_keys: int, repeat: int = 1) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return (time.perf_counter() - t0) / repeat / max(1, n_keys) * 1e9  # ns
+
+
+# ---------------------------------------------------------------------------
+# Fig 8 — theoretical bound of F*_bf vs measured
+# ---------------------------------------------------------------------------
+
+def fig8_theory_bound(scale=0.01, seed=0):
+    rows = []
+    ds = make_dataset("shalla", scale, seed)
+    for k in (2, 4, 6, 8, 10):
+        h = HABF.build(ds.pos_u64, ds.neg_u64, None,
+                       total_bytes=_bits_total(ds.n_pos, 10), k=k, seed=seed)
+        s = h.summary()
+        measured = h.bf.query(ds.neg_u64).mean()
+        fbf = s["n_collision_total"] / s["n_neg"]
+        p_c = theory.p_xi_lower(10, k)
+        bound = theory.fbf_star_upper(fbf, s["n_collision_initial"], p_c, k,
+                                      s["omega"], s["n_neg"])
+        rows.append((f"fig8_k{k}", 0.0,
+                     f"measured={measured:.2e};bound={bound:.2e};"
+                     f"holds={measured <= bound + 1e-12}"))
+    for b in (4, 7, 10, 13):
+        h = HABF.build(ds.pos_u64, ds.neg_u64, None,
+                       total_bytes=_bits_total(ds.n_pos, b), k=4, seed=seed)
+        s = h.summary()
+        measured = h.bf.query(ds.neg_u64).mean()
+        fbf = s["n_collision_total"] / s["n_neg"]
+        bound = theory.fbf_star_upper(fbf, s["n_collision_initial"],
+                                      theory.p_xi_lower(b, 4), 4,
+                                      s["omega"], s["n_neg"])
+        rows.append((f"fig8_b{b}", 0.0,
+                     f"measured={measured:.2e};bound={bound:.2e};"
+                     f"holds={measured <= bound + 1e-12}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 9 — parameters: Delta ratio, k, cell size
+# ---------------------------------------------------------------------------
+
+def fig9_parameters(scale=0.01, seed=0):
+    rows = []
+    ds = make_dataset("shalla", scale, seed)
+    total = _bits_total(ds.n_pos, 10)
+    for delta in (0.05, 0.15, 0.25, 0.4, 0.6):
+        h = HABF.build(ds.pos_u64, ds.neg_u64, None, total_bytes=total,
+                       delta=delta, k=3, seed=seed)
+        rows.append((f"fig9_delta{delta}", 0.0,
+                     f"wfpr={h.query(ds.neg_u64).mean():.3e}"))
+    for k in (2, 3, 4, 5, 6, 8):
+        h = HABF.build(ds.pos_u64, ds.neg_u64, None, total_bytes=total,
+                       k=k, seed=seed)
+        rows.append((f"fig9_k{k}", 0.0,
+                     f"wfpr={h.query(ds.neg_u64).mean():.3e}"))
+    for n_hash, cell in ((3, 3), (7, 4), (15, 5), (22, 6)):
+        h = HABF.build(ds.pos_u64, ds.neg_u64, None, total_bytes=total,
+                       k=3, n_hash=n_hash, seed=seed)
+        rows.append((f"fig9_cell{cell}_nhash{n_hash}", 0.0,
+                     f"wfpr={h.query(ds.neg_u64).mean():.3e}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 10/11 — weighted FPR vs space (uniform / Zipf 1.0), both datasets
+# ---------------------------------------------------------------------------
+
+def _filters_at(ds, total, costs, seed, with_learned=False):
+    out = {}
+    t0 = time.perf_counter()
+    out["habf"] = HABF.build(ds.pos_u64, ds.neg_u64, costs,
+                             total_bytes=total, k=3, seed=seed)
+    out["fhabf"] = HABF.build(ds.pos_u64, ds.neg_u64, costs,
+                              total_bytes=total, k=3, seed=seed, fast=True)
+    bpk = total * 8 / ds.n_pos
+    bf = BloomFilter(total * 8, k=optimal_k(bpk))
+    bf.insert(ds.pos_u64)
+    out["bf"] = bf
+    out["xor"] = xor_filter_for_space(ds.pos_u64, total)
+    wbf = WeightedBloomFilter(total * 8, k_bar=optimal_k(bpk))
+    wbf.build(ds.pos_u64, None)
+    out["wbf"] = wbf
+    if with_learned:
+        from repro.core.learned import build_lbf, build_adabf
+        out["lbf"] = build_lbf(ds.pos_strs, ds.pos_u64, ds.neg_strs,
+                               ds.neg_u64, total, seed=seed)
+        out["slbf"] = build_lbf(ds.pos_strs, ds.pos_u64, ds.neg_strs,
+                                ds.neg_u64, total, seed=seed, sandwich=True)
+        out["adabf"] = build_adabf(ds.pos_strs, ds.pos_u64, ds.neg_strs,
+                                   ds.neg_u64, total, seed=seed)
+    return out
+
+
+def _query_all(f, name, ds):
+    if name in ("lbf", "slbf", "adabf"):
+        return f.query(ds.neg_strs, ds.neg_u64)
+    return f.query(ds.neg_u64)
+
+
+def fig10_11_fpr_vs_space(scale=0.01, seed=0, skew=0.0, dataset="shalla",
+                          with_learned=True, tag="fig10"):
+    rows = []
+    ds = make_dataset(dataset, scale if dataset == "shalla" else scale / 5,
+                      seed)
+    costs = zipf_costs(ds.n_neg, skew, seed + 1)
+    for bpk in (8, 10, 12, 14, 17):
+        total = _bits_total(ds.n_pos, bpk)
+        filters = _filters_at(ds, total, costs, seed,
+                              with_learned=(with_learned and bpk in (10, 14)))
+        for name, f in filters.items():
+            w = weighted_fpr(_query_all(f, name, ds), costs)
+            rows.append((f"{tag}_{dataset}_bpk{bpk}_{name}", 0.0,
+                         f"wfpr={w:.3e}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 12 — construction + query time (ns/key)
+# ---------------------------------------------------------------------------
+
+def fig12_time(scale=0.01, seed=0):
+    rows = []
+    ds = make_dataset("shalla", scale, seed)
+    total = _bits_total(ds.n_pos, 10)
+    costs = zipf_costs(ds.n_neg, 1.0, seed)
+
+    t0 = time.perf_counter()
+    h = HABF.build(ds.pos_u64, ds.neg_u64, costs, total_bytes=total, k=3,
+                   seed=seed)
+    habf_c = (time.perf_counter() - t0) / (ds.n_pos + ds.n_neg) * 1e9
+    t0 = time.perf_counter()
+    hf = HABF.build(ds.pos_u64, ds.neg_u64, costs, total_bytes=total, k=3,
+                    seed=seed, fast=True)
+    fhabf_c = (time.perf_counter() - t0) / (ds.n_pos + ds.n_neg) * 1e9
+    t0 = time.perf_counter()
+    bf = BloomFilter(total * 8, k=optimal_k(10))
+    bf.insert(ds.pos_u64)
+    bf_c = (time.perf_counter() - t0) / ds.n_pos * 1e9
+    t0 = time.perf_counter()
+    xf = xor_filter_for_space(ds.pos_u64, total)
+    xor_c = (time.perf_counter() - t0) / ds.n_pos * 1e9
+    t0 = time.perf_counter()
+    wbf = WeightedBloomFilter(total * 8, k_bar=optimal_k(10))
+    wbf.build(ds.pos_u64, None)
+    wbf_c = (time.perf_counter() - t0) / ds.n_pos * 1e9
+
+    qn = len(ds.neg_u64)
+    habf_q = _time_per_key(lambda: h.query(ds.neg_u64), qn, 3)
+    fhabf_q = _time_per_key(lambda: hf.query(ds.neg_u64), qn, 3)
+    bf_q = _time_per_key(lambda: bf.query(ds.neg_u64), qn, 3)
+    xor_q = _time_per_key(lambda: xf.query(ds.neg_u64), qn, 3)
+    wbf_q = _time_per_key(lambda: wbf.query(ds.neg_u64), qn, 3)
+    for nm, c, q in (("habf", habf_c, habf_q), ("fhabf", fhabf_c, fhabf_q),
+                     ("bf", bf_c, bf_q), ("xor", xor_c, xor_q),
+                     ("wbf", wbf_c, wbf_q)):
+        rows.append((f"fig12_construct_{nm}", c / 1e3, f"ns_per_key={c:.0f}"))
+        rows.append((f"fig12_query_{nm}", q / 1e3, f"ns_per_key={q:.0f}"))
+    # learned filter (paper: construction/query orders of magnitude slower)
+    from repro.core.learned import build_lbf
+    t0 = time.perf_counter()
+    lbf = build_lbf(ds.pos_strs, ds.pos_u64, ds.neg_strs, ds.neg_u64, total)
+    lbf_c = (time.perf_counter() - t0) / (ds.n_pos + ds.n_neg) * 1e9
+    lbf_q = _time_per_key(lambda: lbf.query(ds.neg_strs, ds.neg_u64), qn, 1)
+    rows.append(("fig12_construct_lbf", lbf_c / 1e3, f"ns_per_key={lbf_c:.0f}"))
+    rows.append(("fig12_query_lbf", lbf_q / 1e3, f"ns_per_key={lbf_q:.0f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 13 — weighted FPR vs skewness
+# ---------------------------------------------------------------------------
+
+def fig13_skew(scale=0.01, seed=0):
+    rows = []
+    ds = make_dataset("shalla", scale, seed)
+    total = _bits_total(ds.n_pos, 10)
+    for skew in (0.0, 0.6, 0.9, 1.2, 1.8, 2.4, 3.0):
+        costs = zipf_costs(ds.n_neg, skew, seed + int(skew * 10))
+        h = HABF.build(ds.pos_u64, ds.neg_u64, costs, total_bytes=total,
+                       k=3, seed=seed)
+        hf = HABF.build(ds.pos_u64, ds.neg_u64, costs, total_bytes=total,
+                        k=3, seed=seed, fast=True)
+        bf = BloomFilter(total * 8, k=optimal_k(10))
+        bf.insert(ds.pos_u64)
+        xf = xor_filter_for_space(ds.pos_u64, total)
+        for nm, f in (("habf", h), ("fhabf", hf), ("bf", bf), ("xor", xf)):
+            rows.append((f"fig13_skew{skew}_{nm}", 0.0,
+                         f"wfpr={weighted_fpr(f.query(ds.neg_u64), costs):.3e}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 14 — BF with different hash implementations
+# ---------------------------------------------------------------------------
+
+def fig14_hash_impls(scale=0.002, seed=0):
+    rows = []
+    ds = make_dataset("ycsb", scale, seed)
+    total = _bits_total(ds.n_pos, 10)
+    k = optimal_k(10)
+    for skew in (0.0, 1.0):
+        costs = zipf_costs(ds.n_neg, skew, seed + 5)
+        variants = {
+            "bf_family": BloomFilter(total * 8, k),
+            "bf_seeded": BloomFilter(total * 8, k,
+                                     family=hashing.make_family(k, seed=0xC17)),
+            "bf_double": DoubleHashBloomFilter(total * 8, k),
+        }
+        for nm, bf in variants.items():
+            bf.insert(ds.pos_u64)
+            rows.append((f"fig14_{nm}_skew{skew}", 0.0,
+                         f"wfpr={weighted_fpr(bf.query(ds.neg_u64), costs):.3e}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 15 — construction memory footprint
+# ---------------------------------------------------------------------------
+
+def fig15_memory(scale=0.005, seed=0):
+    rows = []
+    ds = make_dataset("shalla", scale, seed)
+    total = _bits_total(ds.n_pos, 10)
+
+    def peak(fn):
+        tracemalloc.start()
+        fn()
+        _, pk = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        return pk
+
+    builds = {
+        "habf": lambda: HABF.build(ds.pos_u64, ds.neg_u64, None,
+                                   total_bytes=total, k=3, seed=seed),
+        "fhabf": lambda: HABF.build(ds.pos_u64, ds.neg_u64, None,
+                                    total_bytes=total, k=3, seed=seed,
+                                    fast=True),
+        "bf": lambda: BloomFilter(total * 8, 7).insert(ds.pos_u64),
+        "xor": lambda: xor_filter_for_space(ds.pos_u64, total),
+        "wbf": lambda: WeightedBloomFilter(total * 8, 7).build(ds.pos_u64,
+                                                               None),
+    }
+    for nm, fn in builds.items():
+        rows.append((f"fig15_mem_{nm}", 0.0,
+                     f"peak_mb={peak(fn) / 1e6:.1f}"))
+    return rows

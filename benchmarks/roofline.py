@@ -1,0 +1,138 @@
+"""Roofline analysis over the dry-run records (EXPERIMENTS.md §Roofline).
+
+Terms (per assignment, v5e constants):
+  compute    = HLO_FLOPs_per_chip / 197e12  [s]
+  memory     = HLO_bytes_per_chip / 819e9   [s]
+  collective = collective_bytes_per_chip / 50e9  [s]
+
+HLO_FLOPs/bytes come from the trip-count-scaled HLO analyzer (XLA's own
+cost_analysis counts while bodies once — see launch/hlo_analysis.py).
+MODEL_FLOPS = 6·N·D for train (N = active params, D = tokens), 2·N·D for
+prefill, 2·N·B for a decode step; the ratio MODEL_FLOPS/HLO_FLOPs exposes
+remat/dispatch overhead.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,        # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    n = rec["params_active"]
+    toks = SHAPE_TOKENS[rec["shape"]]
+    if rec["kind"] == "train":
+        return 6.0 * n * toks
+    return 2.0 * n * toks
+
+
+def load_records(d: Path) -> list:
+    recs = []
+    for p in sorted(d.glob("*.json")):
+        if "FAILED" in p.name:
+            continue
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def analyze_record(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    flops_dev = rec.get("hlo_flops_per_device", 0.0)
+    bytes_dev = rec.get("hlo_bytes_per_device", 0.0)
+    coll_dev = sum(d["bytes"] for d in rec.get("collectives", {}).values())
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_l = coll_dev / LINK_BW
+    mf = model_flops(rec)
+    useful = mf / (flops_dev * chips) if flops_dev else 0.0
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # roofline fraction: useful-model-time / bound-time (how much of the
+    # limiting resource feeds model math)
+    t_model = mf / chips / PEAK_FLOPS
+    frac = t_model / bound if bound else 0.0
+    return {
+        **{k: rec.get(k) for k in ("arch", "shape", "mesh", "kind", "accum")},
+        "chips": chips,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_l,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_total": flops_dev * chips,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "collective_detail": rec.get("collectives", {}),
+        "temp_bytes": rec.get("temp_size_in_bytes"),
+        "arg_bytes": rec.get("args_bytes_per_device"),
+    }
+
+
+_SUGGEST = {
+    "compute": ("drop remat recompute / shrink dispatch-mask matmuls so "
+                "HLO FLOPs approach 6ND"),
+    "memory": ("raise arithmetic intensity: larger microbatch per chip, "
+               "fuse norms/rope, keep KV cache reads coalesced"),
+    "collective": ("reshard to cut the biggest collective (move all-gather "
+                   "off the hot loop, overlap with compute, or compress)"),
+}
+
+
+def to_markdown(rows: list) -> str:
+    hdr = ("| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "dominant | MODEL/HLO | roofline frac | next lever |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {_SUGGEST[r['dominant']][:52]}… |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--out", default="experiments/roofline.md")
+    ap.add_argument("--json-out", default="experiments/roofline.json")
+    args = ap.parse_args()
+
+    recs = load_records(Path(args.dir) / args.mesh)
+    rows = [analyze_record(r) for r in recs]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    md = to_markdown(rows)
+    Path(args.out).write_text(md + "\n")
+    Path(args.json_out).write_text(json.dumps(rows, indent=1))
+    print(md)
+    print(f"\nwrote {args.out} and {args.json_out} ({len(rows)} cells)")
+    # worst cells by roofline fraction (hillclimb candidates)
+    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:5]
+    print("\nworst roofline fractions:")
+    for r in worst:
+        print(f"  {r['arch']} x {r['shape']}: {r['roofline_fraction']:.3f} "
+              f"({r['dominant']}-bound)")
+    coll = sorted(rows, key=lambda r: -r["t_collective_s"])[:5]
+    print("most collective-bound:")
+    for r in coll:
+        print(f"  {r['arch']} x {r['shape']}: t_coll={r['t_collective_s']:.3e}s"
+              f" ({r['dominant']}-bound)")
+
+
+if __name__ == "__main__":
+    main()

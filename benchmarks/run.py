@@ -1,0 +1,75 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale 0.01] [--only fig12]
+  PYTHONPATH=src python -m benchmarks.run --full        # paper-scale
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import paper_figs, kernel_bench
+
+
+def suites(scale: float, seed: int, with_learned: bool):
+    return {
+        "fig8": lambda: paper_figs.fig8_theory_bound(scale, seed),
+        "fig9": lambda: paper_figs.fig9_parameters(scale, seed),
+        "fig10": lambda: paper_figs.fig10_11_fpr_vs_space(
+            scale, seed, skew=0.0, dataset="shalla",
+            with_learned=with_learned, tag="fig10"),
+        "fig10_ycsb": lambda: paper_figs.fig10_11_fpr_vs_space(
+            scale, seed, skew=0.0, dataset="ycsb", with_learned=False,
+            tag="fig10"),
+        "fig11": lambda: paper_figs.fig10_11_fpr_vs_space(
+            scale, seed, skew=1.0, dataset="shalla",
+            with_learned=with_learned, tag="fig11"),
+        "fig11_ycsb": lambda: paper_figs.fig10_11_fpr_vs_space(
+            scale, seed, skew=1.0, dataset="ycsb", with_learned=False,
+            tag="fig11"),
+        "fig12": lambda: paper_figs.fig12_time(scale, seed),
+        "fig13": lambda: paper_figs.fig13_skew(scale, seed),
+        "fig14": lambda: paper_figs.fig14_hash_impls(max(0.001, scale / 5),
+                                                     seed),
+        "fig15": lambda: paper_figs.fig15_memory(scale / 2, seed),
+        "kernels": lambda: kernel_bench.kernel_throughput(scale, seed),
+        "serving": lambda: kernel_bench.serving_throughput(seed),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.01,
+                    help="dataset scale vs paper size (1.0 = paper)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale datasets (slow)")
+    ap.add_argument("--no-learned", dest="learned", action="store_false")
+    args = ap.parse_args()
+    scale = 1.0 if args.full else args.scale
+
+    table = suites(scale, args.seed, args.learned)
+    names = args.only.split(",") if args.only else list(table)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            for row in table[name]():
+                print(f"{row[0]},{row[1]:.3f},{row[2]}", flush=True)
+        except Exception as e:  # pragma: no cover
+            failed += 1
+            print(f"{name},0,ERROR={e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

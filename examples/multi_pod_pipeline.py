@@ -1,0 +1,43 @@
+"""Pipeline parallelism demo: GPipe stages over a (simulated) pod axis.
+
+Runs a 4-stage pipeline of transformer-ish blocks over 8 host devices and
+verifies the fill/drain schedule reproduces sequential execution exactly.
+
+  PYTHONPATH=src python examples/multi_pod_pipeline.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.pipeline import gpipe
+
+S, n_micro, mb, d = 4, 12, 2, 64
+key = jax.random.PRNGKey(0)
+k1, k2, k3 = jax.random.split(key, 3)
+params = {
+    "w1": jax.random.normal(k1, (S, d, 2 * d)) * 0.1,
+    "w2": jax.random.normal(k2, (S, 2 * d, d)) * 0.1,
+    "ln": jnp.ones((S, d)),
+}
+
+
+def apply_stage(p, h):
+    hn = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6) * p["ln"]
+    return h + jnp.tanh(hn @ p["w1"]) @ p["w2"]
+
+
+x = jax.random.normal(k3, (n_micro, mb, d))
+ref = x
+for s in range(S):
+    ref = apply_stage(jax.tree.map(lambda t: t[s], params), ref)
+
+mesh = jax.make_mesh((4, 2), ("pipe", "data"))
+y = gpipe(apply_stage, params, x, mesh, axis="pipe")
+err = float(jnp.max(jnp.abs(y - ref)))
+bubble = (S - 1) / (n_micro + S - 1)
+print(f"4-stage GPipe over {mesh.devices.size} devices: max|err| = {err:.2e}")
+print(f"schedule: {n_micro + S - 1} steps for {n_micro} microbatches "
+      f"(bubble fraction {bubble:.0%})")
+assert err < 1e-5

@@ -1,0 +1,17 @@
+"""Train a reduced LM end-to-end with the full substrate: HABF-dedup data
+pipeline, AdamW + schedule, checkpointing + fault-tolerant supervisor.
+
+  PYTHONPATH=src python examples/train_dedup.py
+"""
+import tempfile
+
+from repro.launch.train import run
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    out = run(arch="qwen3-0.6b", reduced=True, steps=60, batch=8, seq=64,
+              lr=3e-3, ckpt_dir=ckpt_dir, save_every=20, dedup=True, seed=0)
+
+print(f"loss: {out['losses'][0]:.3f} -> {out['final_loss']:.3f} "
+      f"over {len(out['losses'])} steps")
+print(f"dedup filter skipped {out['skipped_docs']} duplicate docs")
+assert out["final_loss"] < out["losses"][0]

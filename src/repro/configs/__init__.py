@@ -1,0 +1,21 @@
+"""Architecture registry: one module per assigned architecture."""
+from .base import (ModelConfig, ShapeConfig, AttnConfig, MoEConfig,
+                   MLAConfig, SSMConfig, SHAPES, RunConfig, accum_for)
+from . import (llama4_maverick_400b_a17b, deepseek_v2_lite_16b,
+               mistral_nemo_12b, llama3_405b, qwen2_1_5b, qwen3_0_6b,
+               mamba2_780m, zamba2_1_2b, llava_next_mistral_7b, whisper_tiny)
+
+_MODULES = (llama4_maverick_400b_a17b, deepseek_v2_lite_16b,
+            mistral_nemo_12b, llama3_405b, qwen2_1_5b, qwen3_0_6b,
+            mamba2_780m, zamba2_1_2b, llava_next_mistral_7b, whisper_tiny)
+
+ARCHS: dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+REDUCED: dict[str, ModelConfig] = {m.CONFIG.name: m.reduced()
+                                   for m in _MODULES}
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    table = REDUCED if reduced else ARCHS
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]

@@ -1,0 +1,195 @@
+"""Config system: model/shape/run dataclasses + the architecture registry.
+
+Every assigned architecture gets one module in this package defining
+`CONFIG: ModelConfig` with the exact published numbers, plus a
+`reduced()` variant for CPU smoke tests.  Shapes are the four assigned
+input-shape cells; `kind` selects which step function the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    nope_dim: int = 128
+    rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    expert_ff: int
+    n_shared: int = 0          # shared experts (deepseek) — folded dense ff
+    period: int = 1            # MoE layer every `period` layers (llama4: 2)
+    first_dense: int = 0       # leading dense layers (deepseek: 1)
+    group_size: int = 2048     # GShard dispatch group size (perf knob)
+    capacity_factor: float = 1.25
+    aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state: int = 128
+    conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    chunk: int = 256
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    attn: Optional[AttnConfig] = None
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    shared_attn_period: int = 0     # zamba2: shared attn block every N layers
+    n_img_tokens: int = 0           # llava: stubbed patch embeddings
+    enc_layers: int = 0             # whisper encoder depth
+    enc_frames: int = 1500          # whisper encoder frames (stub)
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-5
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32"
+    remat: str = "none"             # none|dots|full
+    sub_quadratic: bool = False     # can run long_500k
+    fsdp: bool = False              # shard params over `data` too (ZeRO-3)
+    q_chunk: int = 2048             # query-chunked attention block (exact;
+                                    # caps score temp at chunk x S)
+    layers_per_step: int = 1        # layers per scan step: under full remat
+                                    # the saved residual stack shrinks by
+                                    # this factor at equal recompute
+    notes: str = ""
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter counting (for roofline MODEL_FLOPS) ---------------------
+    def param_counts(self) -> dict:
+        """Returns dict(total=..., active=...) approximate param counts."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        total = active = V * D  # embedding
+        if not self.tie_embeddings:
+            total += V * D
+            active += V * D
+        for layer in range(L):
+            lt = lp = 0
+            if self.family in ("ssm",) or (
+                    self.family == "hybrid"
+                    and not self._is_shared_attn_layer(layer)):
+                s = self.ssm
+                d_in = s.expand * D
+                nh = d_in // s.headdim
+                proj_in = D * (2 * d_in + 2 * s.state + nh)
+                conv = (d_in + 2 * s.state) * s.conv
+                lt = proj_in + conv + 3 * nh + d_in + d_in * D
+                lp = lt
+            else:
+                a = self.attn
+                if self.mla is not None:
+                    m = self.mla
+                    h = a.n_heads
+                    qd = h * (m.nope_dim + m.rope_dim)
+                    attn_p = D * qd + D * (m.kv_lora + m.rope_dim) \
+                        + m.kv_lora * h * (m.nope_dim + m.v_dim) \
+                        + h * m.v_dim * D
+                else:
+                    attn_p = D * a.n_heads * a.head_dim * 2 \
+                        + D * a.n_kv * a.head_dim * 2
+                if self.moe is not None and self._is_moe_layer(layer):
+                    mo = self.moe
+                    ff_t = mo.n_experts * 3 * D * mo.expert_ff \
+                        + mo.n_shared * 3 * D * mo.expert_ff + D * mo.n_experts
+                    ff_a = (mo.top_k + mo.n_shared) * 3 * D * mo.expert_ff \
+                        + D * mo.n_experts
+                else:
+                    ff_t = ff_a = 3 * D * F
+                lt = attn_p + ff_t
+                lp = attn_p + ff_a
+            total += lt
+            active += lp
+        # whisper encoder
+        if self.enc_layers:
+            a = self.attn
+            enc = self.enc_layers * (D * a.n_heads * a.head_dim * 4
+                                     + 2 * D * F)
+            total += enc
+            active += enc
+        return dict(total=int(total), active=int(active))
+
+    def _is_moe_layer(self, layer: int) -> bool:
+        mo = self.moe
+        if mo is None or layer < mo.first_dense:
+            return False
+        return (layer - mo.first_dense) % mo.period == mo.period - 1 \
+            if mo.period > 1 else True
+
+    def _is_shared_attn_layer(self, layer: int) -> bool:
+        p = self.shared_attn_period
+        return p > 0 and (layer % p) == p - 1
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train|prefill|decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# per-(arch, shape) microbatching for the train shape: global_batch is
+# split into `accum` sequential microbatches to bound live activations.
+ACCUM_STEPS: dict[tuple[str, str], int] = {}
+
+
+def accum_for(arch: str, shape: str, default: int = 1) -> int:
+    return ACCUM_STEPS.get((arch, shape), default)
+
+
+@dataclass
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    accum: int = 1
+    habf_gate: bool = False        # fuse HABF admission probe into serving
+    rules: Optional[dict] = None   # logical sharding rule override

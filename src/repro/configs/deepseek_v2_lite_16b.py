@@ -1,0 +1,39 @@
+"""deepseek-v2-lite-16b [moe] — 27L d_model=2048 16H d_ff(expert)=1408
+vocab=102400, MoE 64e top-6, 2 shared experts, MLA kv_lora=512.
+[arXiv:2405.04434; hf]
+
+Assignment note: the assignment line reads "2 shared+160 routed top-6";
+the published V2-Lite config is 64 routed + 2 shared (160 routed is
+DeepSeek-V2 full).  We follow the assignment's "MoE 64e top-6" with
+2 shared experts and note the discrepancy here.  First layer is dense
+(d_ff 10944) per the published config."""
+from .base import AttnConfig, MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    d_ff=10_944,                      # first dense layer FFN
+    vocab=102_400,
+    attn=AttnConfig(n_heads=16, n_kv=16, head_dim=128, rope_theta=10_000.0),
+    mla=MLAConfig(kv_lora=512, nope_dim=128, rope_dim=64, v_dim=128),
+    moe=MoEConfig(n_experts=64, top_k=6, expert_ff=1408, n_shared=2,
+                  period=1, first_dense=1, group_size=2048,
+                  capacity_factor=1.25),
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    remat="dots",
+    notes="MLA latent KV cache (512+64 per token, vs 16*128*2 for GQA).",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=3, d_model=64, d_ff=128, vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv=4, head_dim=16),
+        mla=MLAConfig(kv_lora=32, nope_dim=16, rope_dim=8, v_dim=16),
+        moe=MoEConfig(n_experts=4, top_k=2, expert_ff=64, n_shared=1,
+                      period=1, first_dense=1, group_size=64,
+                      capacity_factor=1.5),
+        param_dtype="float32", remat="none")

@@ -1,0 +1,30 @@
+"""llama3-405b [dense] — 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256.  [arXiv:2407.21783; unverified]
+
+Fitting a v5e pod (16 GB HBM): bf16 params + bf16 Adam moments
+(opt_state_dtype) + full remat + gradient accumulation (ACCUM_STEPS in
+launch/dryrun).  See EXPERIMENTS.md §Dry-run for the memory analysis."""
+from .base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16_384,
+    d_ff=53_248,
+    vocab=128_256,
+    attn=AttnConfig(n_heads=128, n_kv=8, head_dim=128, rope_theta=500_000.0),
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    opt_state_dtype="bfloat16",
+    remat="full",
+    fsdp=True,
+    layers_per_step=6,   # 21 scan steps: saved-residual stack /6 at equal recompute
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=3, d_model=64, d_ff=192, vocab=512,
+        attn=AttnConfig(n_heads=8, n_kv=2, head_dim=16),
+        param_dtype="float32", opt_state_dtype="float32", remat="none")

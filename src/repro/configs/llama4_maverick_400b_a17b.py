@@ -1,0 +1,33 @@
+"""llama4-maverick-400b-a17b [moe] — 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 128e top-1, interleaved dense/MoE layers +
+shared expert (early fusion; text shapes only per assignment).
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from .base import AttnConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    d_ff=8192,
+    vocab=202_048,
+    attn=AttnConfig(n_heads=40, n_kv=8, head_dim=128, rope_theta=500_000.0),
+    moe=MoEConfig(n_experts=128, top_k=1, expert_ff=8192, n_shared=1,
+                  period=2, group_size=4096, capacity_factor=1.25),
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    opt_state_dtype="bfloat16",   # 400B total params: bf16 Adam state to fit
+    remat="full",
+    fsdp=True,
+    notes=("Interleaved dense/MoE every other layer (period=2); one shared "
+           "expert per MoE layer. 400B total / ~17B active."),
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=4, d_model=64, d_ff=128, vocab=512,
+        attn=AttnConfig(n_heads=8, n_kv=4, head_dim=8),
+        moe=MoEConfig(n_experts=4, top_k=1, expert_ff=128, n_shared=1,
+                      period=2, group_size=64, capacity_factor=1.5),
+        param_dtype="float32", opt_state_dtype="float32", remat="none")

@@ -1,0 +1,28 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B backbone: 32L d_model=4096 32H
+(GQA kv=8) d_ff=14336 vocab=32000; anyres tiling stubbed — input_specs()
+provides 576 precomputed patch embeddings at d_model (one base-resolution
+tile; the vision tower + projector are the assignment-mandated stub).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]"""
+from .base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    d_ff=14_336,
+    vocab=32_000,
+    attn=AttnConfig(n_heads=32, n_kv=8, head_dim=128, rope_theta=1_000_000.0),
+    n_img_tokens=576,
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    remat="dots",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=3, d_model=64, d_ff=160, vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv=2, head_dim=16),
+        n_img_tokens=16,
+        param_dtype="float32", remat="none")

@@ -1,0 +1,25 @@
+"""mamba2-780m [ssm] — 48L d_model=1536 (attention-free) vocab=50280,
+ssm_state=128, SSD (state-space duality).  Sub-quadratic: runs long_500k.
+[arXiv:2405.21060; unverified]"""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    d_ff=0,
+    vocab=50_280,
+    ssm=SSMConfig(state=128, conv=4, expand=2, headdim=64, chunk=256),
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    remat="dots",
+    sub_quadratic=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=3, d_model=64, vocab=512,
+        ssm=SSMConfig(state=16, conv=4, expand=2, headdim=16, chunk=32),
+        param_dtype="float32", remat="none")

@@ -1,0 +1,24 @@
+"""mistral-nemo-12b [dense] — 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072, 128k ctx, head_dim=128 (explicit, != d_model/n_heads).
+[hf:mistralai/Mistral-Nemo-Base-2407; hf]"""
+from .base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    d_ff=14_336,
+    vocab=131_072,
+    attn=AttnConfig(n_heads=32, n_kv=8, head_dim=128, rope_theta=1_000_000.0),
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    remat="dots",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=3, d_model=64, d_ff=160, vocab=512,
+        attn=AttnConfig(n_heads=8, n_kv=2, head_dim=16),
+        param_dtype="float32", remat="none")

@@ -1,0 +1,24 @@
+"""qwen2-1.5b [dense] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936, QKV bias.  [arXiv:2407.10671; hf]"""
+from .base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-1.5b",
+    family="dense",
+    n_layers=28,
+    d_model=1536,
+    d_ff=8960,
+    vocab=151_936,
+    attn=AttnConfig(n_heads=12, n_kv=2, head_dim=128, qkv_bias=True,
+                    rope_theta=1_000_000.0),
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    remat="dots",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=3, d_model=64, d_ff=160, vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv=2, head_dim=16, qkv_bias=True),
+        param_dtype="float32", remat="none")

@@ -1,0 +1,24 @@
+"""qwen3-0.6b [dense] — 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936, qk-norm.  [hf:Qwen/Qwen3-8B; hf]"""
+from .base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    d_ff=3072,
+    vocab=151_936,
+    attn=AttnConfig(n_heads=16, n_kv=8, head_dim=128, qk_norm=True,
+                    rope_theta=1_000_000.0),
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    remat="dots",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=3, d_model=64, d_ff=160, vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv=2, head_dim=16, qk_norm=True),
+        param_dtype="float32", remat="none")

@@ -1,0 +1,26 @@
+"""whisper-tiny [audio] — enc-dec, 4L+4L d_model=384 6H d_ff=1536
+vocab=51865; conv frontend stubbed — input_specs() provides precomputed
+frame embeddings (B, 1500, 384).  [arXiv:2212.04356; unverified]"""
+from .base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    d_ff=1536,
+    vocab=51_865,
+    attn=AttnConfig(n_heads=6, n_kv=6, head_dim=64, rope_theta=10_000.0),
+    enc_layers=4,
+    enc_frames=1500,
+    tie_embeddings=True,
+    param_dtype="float32",
+    remat="none",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, d_ff=128, vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv=4, head_dim=16),
+        enc_layers=2, enc_frames=64)

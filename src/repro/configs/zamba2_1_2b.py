@@ -1,0 +1,29 @@
+"""zamba2-1.2b [hybrid] — 38L d_model=2048, Mamba-2 backbone (ssm_state=64)
++ shared attention block (32H MHA kv=32, d_ff=8192) applied every 6
+layers.  Sub-quadratic backbone: runs long_500k.  [arXiv:2411.15242; hf]"""
+from .base import AttnConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    d_ff=8192,
+    vocab=32_000,
+    attn=AttnConfig(n_heads=32, n_kv=32, head_dim=64, rope_theta=10_000.0),
+    ssm=SSMConfig(state=64, conv=4, expand=2, headdim=64, chunk=256),
+    shared_attn_period=6,
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    remat="dots",
+    sub_quadratic=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=5, d_model=64, d_ff=128, vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv=4, head_dim=16),
+        ssm=SSMConfig(state=16, conv=4, expand=2, headdim=16, chunk=32),
+        shared_attn_period=2,
+        param_dtype="float32", remat="none")

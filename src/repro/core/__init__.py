@@ -1,0 +1,17 @@
+"""HABF core — the paper's contribution + all compared baselines."""
+from .habf import HABF, HABFConfig, build_habf, build_fhabf
+from .bloom import BloomFilter, DoubleHashBloomFilter, optimal_k
+from .hash_expressor import HashExpressor
+from .xor_filter import XorFilter, xor_filter_for_space
+from .wbf import WeightedBloomFilter
+from .costs import zipf_costs
+from .metrics import weighted_fpr, fpr, fnr
+from . import hashing, theory, datasets
+
+__all__ = [
+    "HABF", "HABFConfig", "build_habf", "build_fhabf",
+    "BloomFilter", "DoubleHashBloomFilter", "optimal_k",
+    "HashExpressor", "XorFilter", "xor_filter_for_space",
+    "WeightedBloomFilter", "zipf_costs", "weighted_fpr", "fpr", "fnr",
+    "hashing", "theory", "datasets",
+]

@@ -1,0 +1,104 @@
+"""Standard Bloom filter (paper baseline + HABF's underlying bit vector).
+
+Bits are stored word-packed (uint32) so the same buffer is consumed by the
+device-side query kernels.  Host construction / query are fully vectorized
+numpy.  Per-key hash-function sets are supported (HABF's phi); the classic
+filter is the special case where every key uses the same H0.
+"""
+from __future__ import annotations
+
+import math
+import numpy as np
+
+from . import hashing
+
+
+class BitVector:
+    """Word-packed bit vector with vectorized set/test."""
+
+    def __init__(self, m_bits: int):
+        self.m = int(m_bits)
+        self.words = np.zeros(((self.m + 31) // 32,), np.uint32)
+
+    def set_bits(self, idx: np.ndarray) -> None:
+        idx = np.asarray(idx).reshape(-1)
+        np.bitwise_or.at(self.words, idx >> 5,
+                         (np.uint32(1) << (idx & 31).astype(np.uint32)))
+
+    def clear_bit(self, i: int) -> None:
+        self.words[i >> 5] &= ~(np.uint32(1) << np.uint32(i & 31))
+
+    def test_bits(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx)
+        return (self.words[idx >> 5] >> (idx & 31).astype(np.uint32)) & 1
+
+    def count(self) -> int:
+        return int(np.unpackbits(self.words.view(np.uint8)).sum())
+
+
+def optimal_k(bits_per_key: float) -> int:
+    return max(1, int(round(math.log(2) * bits_per_key)))
+
+
+class BloomFilter:
+    """Classic Bloom filter over 64-bit key fingerprints.
+
+    hash_idx: the k global-family hash indices used by *all* keys (H0).
+    """
+
+    def __init__(self, m_bits: int, k: int, family=hashing.FAMILY,
+                 hash_idx: np.ndarray | None = None):
+        self.bits = BitVector(m_bits)
+        self.k = int(k)
+        self.family = family
+        self.hash_idx = (np.arange(k, dtype=np.int64)
+                         if hash_idx is None else np.asarray(hash_idx, np.int64))
+        assert len(self.hash_idx) == self.k
+
+    # -- vectorized index computation -------------------------------------
+    def key_bits(self, keys_u64: np.ndarray,
+                 phi: np.ndarray | None = None) -> np.ndarray:
+        """(n, k) bit indices.  phi: optional (n, k) per-key hash indices."""
+        keys_u64 = np.asarray(keys_u64, np.uint64)
+        if phi is None:
+            idx = hashing.hash_index_np(keys_u64[:, None], self.hash_idx[None, :],
+                                        self.bits.m, self.family)
+        else:
+            idx = hashing.hash_index_np(keys_u64[:, None], np.asarray(phi),
+                                        self.bits.m, self.family)
+        return idx
+
+    # -- operations --------------------------------------------------------
+    def insert(self, keys_u64: np.ndarray, phi: np.ndarray | None = None) -> None:
+        self.bits.set_bits(self.key_bits(keys_u64, phi))
+
+    def query(self, keys_u64: np.ndarray, phi: np.ndarray | None = None) -> np.ndarray:
+        """Vectorized membership test -> bool (n,)."""
+        idx = self.key_bits(keys_u64, phi)
+        return self.bits.test_bits(idx).all(axis=-1)
+
+    # -- device export -------------------------------------------------------
+    def device_tables(self) -> dict:
+        return {
+            "words": self.bits.words.copy(),
+            "m": self.bits.m,
+            "hash_idx": self.hash_idx.copy(),
+            "c1": self.family["c1"],
+            "c2": self.family["c2"],
+            "mul": self.family["mul"],
+        }
+
+    @property
+    def size_bytes(self) -> int:
+        return self.bits.words.nbytes
+
+
+class DoubleHashBloomFilter(BloomFilter):
+    """f-HABF / Kirsch–Mitzenmacher double-hashing variant: g_i = h_a + i*h_b.
+    `hash index` i is the multiplier, so phi rows are still integer index sets."""
+
+    def key_bits(self, keys_u64, phi=None):
+        keys_u64 = np.asarray(keys_u64, np.uint64)
+        idx = self.hash_idx[None, :] if phi is None else np.asarray(phi)
+        hv = hashing.double_hash_value_np(keys_u64[:, None], idx, self.family)
+        return hashing.fastrange_np(hv, self.bits.m)

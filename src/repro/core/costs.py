@@ -1,0 +1,21 @@
+"""Cost distributions (paper §V-C): Zipf with skewness theta in [0, 3],
+randomly shuffled onto keys; theta = 0 degenerates to uniform."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def zipf_costs(n: int, skew: float, seed: int = 0,
+               shuffle: bool = True) -> np.ndarray:
+    """Zipf(skew) cost vector of length n, mean-normalized to 1."""
+    if n == 0:
+        return np.zeros((0,))
+    if skew <= 0:
+        return np.ones((n,))
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    c = ranks ** (-float(skew))
+    c *= n / c.sum()
+    if shuffle:
+        rng = np.random.default_rng(seed)
+        rng.shuffle(c)
+    return c

@@ -1,0 +1,90 @@
+"""Synthetic stand-ins for the paper's datasets (offline container;
+DESIGN.md §8):
+
+  * shalla-like — URL-ish strings with evident structure (zipfian domain
+    vocabulary, path segments), 50.9% positive / 49.1% negative split as
+    in Shalla's Blacklists (1,491,178 / 1,435,527 at full scale).
+  * ycsb-like   — 4-byte prefix + 64-bit integer, no structure
+    (12,500,611 / 11,574,201 at full scale).
+
+`scale` shrinks both proportionally for the CPU container.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .hashing import fingerprint_bytes
+
+SHALLA_POS, SHALLA_NEG = 1_491_178, 1_435_527
+YCSB_POS, YCSB_NEG = 12_500_611, 11_574_201
+
+
+@dataclass
+class KeySets:
+    name: str
+    pos_strs: list
+    neg_strs: list
+    pos_u64: np.ndarray
+    neg_u64: np.ndarray
+
+    @property
+    def n_pos(self):
+        return len(self.pos_u64)
+
+    @property
+    def n_neg(self):
+        return len(self.neg_u64)
+
+
+_TLDS = ["com", "net", "org", "io", "de", "cn", "ru", "info", "biz", "xxx"]
+_WORDS = ["porn", "adult", "video", "cam", "free", "live", "hot", "chat",
+          "game", "bet", "casino", "win", "shop", "cheap", "pill", "med",
+          "news", "blog", "mail", "search", "photo", "file", "host", "link"]
+
+
+def _urls(n: int, rng: np.random.Generator, salt: str) -> list:
+    # zipf-weighted vocabulary -> "evident characteristics" like Shalla
+    wp = 1.0 / np.arange(1, len(_WORDS) + 1)
+    wp /= wp.sum()
+    w1 = rng.choice(_WORDS, n, p=wp)
+    w2 = rng.choice(_WORDS, n, p=wp)
+    tld = rng.choice(_TLDS, n)
+    num = rng.integers(0, 100_000, n)
+    return [f"{a}{b}{salt}{c}.{t}/p{c % 97}" for a, b, c, t
+            in zip(w1, w2, num, tld)]
+
+
+def make_shalla(scale: float = 0.1, seed: int = 0) -> KeySets:
+    rng = np.random.default_rng(seed)
+    n_pos = max(1000, int(SHALLA_POS * scale))
+    n_neg = max(1000, int(SHALLA_NEG * scale))
+    # positives: blacklist domains; negatives: different salt namespace
+    pos = _urls(n_pos, rng, salt="x")
+    neg = _urls(n_neg, rng, salt="-ok")
+    pos = list(dict.fromkeys(pos))
+    negset = set(pos)
+    neg = [u for u in dict.fromkeys(neg) if u not in negset]
+    return KeySets("shalla", pos, neg,
+                   fingerprint_bytes(pos), fingerprint_bytes(neg))
+
+
+def make_ycsb(scale: float = 0.01, seed: int = 0) -> KeySets:
+    rng = np.random.default_rng(seed + 1)
+    n_pos = max(1000, int(YCSB_POS * scale))
+    n_neg = max(1000, int(YCSB_NEG * scale))
+    ids = rng.choice(np.uint64(1) << np.uint64(48), n_pos + n_neg,
+                     replace=False)
+    strs = [f"user{int(i):020d}" for i in ids]
+    pos, neg = strs[:n_pos], strs[n_pos:]
+    return KeySets("ycsb", pos, neg,
+                   fingerprint_bytes(pos), fingerprint_bytes(neg))
+
+
+def make_dataset(name: str, scale: float, seed: int = 0) -> KeySets:
+    if name == "shalla":
+        return make_shalla(scale, seed)
+    if name == "ycsb":
+        return make_ycsb(scale, seed)
+    raise ValueError(name)

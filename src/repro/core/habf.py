@@ -1,0 +1,110 @@
+"""Hash Adaptive Bloom Filter (paper §III) — public API.
+
+HABF = standard Bloom filter + HashExpressor, built by TPJO, queried with
+the two-round pattern:
+
+  round 1: query BF with H0.  positive -> POSITIVE.
+  round 2: walk HashExpressor for phi(e); if the walk is valid and the BF
+           passes under phi(e) -> POSITIVE; else NEGATIVE.
+
+Zero FNR: an unadjusted positive passes round 1 (its H0 bits are never
+cleared — TPJO only clears bits solely mapped by the key being adjusted);
+an adjusted positive is in the HashExpressor, retrieves its exact phi and
+passes round 2.
+
+Space layout (paper §V-D): given total bytes and allocation ratio
+Delta = |HashExpressor| / |BF| (default 0.25 = paper's optimum), cell size
+alpha = 1 + ceil(log2(n_hash + 1)) bits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import hashing
+from .tpjo import build_tpjo, TPJOResult
+
+
+@dataclass
+class HABFConfig:
+    total_bytes: int = 2 * 1024 * 1024
+    delta: float = 0.25          # HashExpressor : BF space ratio (paper: 1:4)
+    k: int = 3                   # paper default (§V-D2)
+    n_hash: int = hashing.DEFAULT_N_HASH
+    seed: int = 0
+    fast: bool = False           # f-HABF: double hashing + Gamma disabled
+
+    @property
+    def cell_bits(self) -> int:
+        return 1 + int(np.ceil(np.log2(self.n_hash + 1)))
+
+    def split(self) -> tuple[int, int]:
+        """(m_bits for BF, omega cells for HashExpressor)."""
+        total_bits = self.total_bytes * 8
+        hx_bits = int(total_bits * self.delta / (1.0 + self.delta))
+        omega = max(self.k + 1, hx_bits // self.cell_bits)
+        m_bits = max(64, total_bits - omega * self.cell_bits)
+        return m_bits, omega
+
+
+class HABF:
+    """Build with `HABF.build(...)`, query with `.query(keys)` (host) or
+    export `.device_tables()` for the jnp/Pallas query path."""
+
+    def __init__(self, result: TPJOResult, config: HABFConfig):
+        self.bf = result.bf
+        self.hx = result.hx
+        self.phi_pos = result.phi_pos
+        self.adjusted = result.adjusted
+        self.stats = result.stats
+        self.config = config
+        self.h0 = self.bf.hash_idx
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, pos_keys: np.ndarray, neg_keys: np.ndarray,
+              neg_costs: np.ndarray | None = None,
+              config: HABFConfig | None = None, **overrides) -> "HABF":
+        config = config or HABFConfig(**overrides)
+        m_bits, omega = config.split()
+        result = build_tpjo(pos_keys, neg_keys, neg_costs, m_bits, omega,
+                            config.k, n_hash=config.n_hash, seed=config.seed,
+                            fast=config.fast)
+        return cls(result, config)
+
+    # ------------------------------------------------------------------
+    def query(self, keys_u64: np.ndarray) -> np.ndarray:
+        """Two-round membership test, vectorized on host.  -> bool (n,)."""
+        keys = np.asarray(keys_u64, np.uint64).reshape(-1)
+        round1 = self.bf.query(keys)                       # H0
+        phi, valid = self.hx.query(keys)
+        round2 = self.bf.query(keys, phi=phi)
+        return round1 | (valid & round2)
+
+    # ------------------------------------------------------------------
+    def device_tables(self) -> dict:
+        t = self.bf.device_tables()
+        t.update({f"hx_{k}": v for k, v in self.hx.device_tables().items()})
+        return t
+
+    @property
+    def size_bytes(self) -> float:
+        return self.bf.size_bytes + self.hx.size_bytes
+
+    def summary(self) -> dict:
+        d = self.stats.as_dict()
+        d.update(m_bits=self.bf.bits.m, omega=self.hx.omega,
+                 k=self.config.k, fast=self.config.fast,
+                 bits_set=self.bf.bits.count(),
+                 hx_inserted=self.hx.n_inserted)
+        return d
+
+
+def build_habf(pos_keys, neg_keys, neg_costs=None, **kw) -> HABF:
+    return HABF.build(pos_keys, neg_keys, neg_costs, **kw)
+
+
+def build_fhabf(pos_keys, neg_keys, neg_costs=None, **kw) -> HABF:
+    kw.setdefault("fast", True)
+    return HABF.build(pos_keys, neg_keys, neg_costs, **kw)

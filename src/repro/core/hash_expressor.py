@@ -1,0 +1,141 @@
+"""HashExpressor (paper §III-C): an omega-cell probabilistic hash table
+storing customized hash-function subsets as a k-step pointer walk.
+
+Cell = <endbit, hashindex>.  hashindex is stored 1-based (0 == empty) so a
+cell of alpha bits represents up to 2^(alpha-1) - 1 hash functions,
+matching the paper's cell-size analysis (§V-D3).
+
+Insertion walks the table resolving one hash of phi per step (Case 1:
+claim an empty cell with a random unresolved hash; Case 2: share a cell
+that already stores an unresolved hash; Case 3: fail).  The endbit of the
+last visited cell is set.  Insertions never overwrite non-empty cells, so
+earlier keys' walks remain intact — the zero-FNR invariant (tested).
+
+Query replays the walk: cell_1 = f(e); cell_{i+1} = h_{cell_i}(e); valid
+iff all cells non-empty and the k-th cell's endbit is 1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import hashing
+
+# Dedicated constants for the predefined "unified" hash function f.
+F_FAMILY = hashing.make_family(1, seed=0xF00D)
+
+
+class HashExpressor:
+    def __init__(self, omega: int, k: int, n_hash: int = hashing.DEFAULT_N_HASH,
+                 family=hashing.FAMILY, double_hash: bool = False):
+        self.omega = int(omega)
+        self.k = int(k)
+        self.n_hash = int(n_hash)
+        self.family = family
+        self.double_hash = bool(double_hash)
+        self.endbit = np.zeros((self.omega,), np.uint8)
+        self.hashidx = np.zeros((self.omega,), np.uint8)  # 0 = empty
+        self.n_inserted = 0
+
+    # -- hashing helpers ----------------------------------------------------
+    def _hv(self, keys_u64, hash_idx):
+        if self.double_hash:
+            return hashing.double_hash_value_np(keys_u64, hash_idx, self.family)
+        return hashing.hash_value_np(keys_u64, hash_idx, self.family)
+
+    def _cell_f(self, keys_u64):
+        hv = hashing.hash_value_np(keys_u64, 0, F_FAMILY)
+        return hashing.fastrange_np(hv, self.omega)
+
+    def _cell_h(self, keys_u64, hash_idx):
+        return hashing.fastrange_np(self._hv(keys_u64, hash_idx), self.omega)
+
+    # -- insertion (host, per-key; construction-time only) -------------------
+    def plan_insert(self, key_u64, phi, rng: np.random.Generator):
+        """Walk the table for hash set `phi` (0-based indices) without
+        mutating it.  Returns (ok, plan) where plan = (writes dict
+        {cell: 1-based hashindex}, last_cell, n_writes).  The plan can be
+        applied later with `commit_plan` — phase-II tests tentatively and
+        commits the cheapest viable plan (max overlap = fewest writes)."""
+        key = np.uint64(key_u64)
+        invalid = list(dict.fromkeys(int(h) for h in phi))  # order-stable uniq
+        if len(invalid) != self.k:
+            return False, None
+        pending: dict[int, int] = {}  # cell -> 1-based hashindex to write
+        cur_idx = None  # None => use f
+        last_cell = -1
+        for _ in range(self.k):
+            cell = int(self._cell_f(key) if cur_idx is None
+                       else self._cell_h(key, cur_idx))
+            content = pending.get(cell, int(self.hashidx[cell]))
+            if content == 0:
+                h = int(invalid[int(rng.integers(len(invalid)))])
+                pending[cell] = h + 1
+                invalid.remove(h)
+                cur_idx = h
+            elif (content - 1) in invalid:
+                h = content - 1
+                invalid.remove(h)
+                cur_idx = h
+            else:
+                return False, None
+            last_cell = cell
+        n_writes = len(pending) + (0 if self.endbit[last_cell] else 1)
+        return True, (pending, last_cell, n_writes)
+
+    def commit_plan(self, plan) -> None:
+        pending, last_cell, _ = plan
+        for cell, hidx in pending.items():
+            self.hashidx[cell] = np.uint8(hidx)
+        self.endbit[last_cell] = 1
+        self.n_inserted += 1
+
+    def try_insert(self, key_u64, phi, rng: np.random.Generator,
+                   commit: bool = True):
+        """Back-compat wrapper: returns (ok, n_new_cell_writes)."""
+        ok, plan = self.plan_insert(key_u64, phi, rng)
+        if not ok:
+            return False, 0
+        if commit:
+            self.commit_plan(plan)
+        return True, plan[2]
+
+    # -- query (host, vectorized over keys) ----------------------------------
+    def query(self, keys_u64: np.ndarray):
+        """Returns (phi (n, k) int64 0-based hash indices, valid (n,) bool).
+        Invalid rows should be treated as phi = H0 by the caller."""
+        keys = np.asarray(keys_u64, np.uint64).reshape(-1)
+        n = keys.shape[0]
+        phi = np.zeros((n, self.k), np.int64)
+        valid = np.ones((n,), bool)
+        cell = self._cell_f(keys)
+        last_end = np.zeros((n,), np.uint8)
+        for step in range(self.k):
+            content = self.hashidx[cell].astype(np.int64)
+            valid &= content != 0
+            hidx = np.maximum(content - 1, 0)
+            phi[:, step] = hidx
+            last_end = self.endbit[cell]
+            if step + 1 < self.k:
+                cell = self._cell_h(keys, hidx)
+        valid &= last_end == 1
+        # a customized phi must differ from H0 as a *set*; duplicate-hash rows
+        # are structurally impossible for inserted keys, keep as-is.
+        return phi, valid
+
+    # -- device export --------------------------------------------------------
+    def device_tables(self) -> dict:
+        return {
+            "endbit": self.endbit.copy(),
+            "hashidx": self.hashidx.copy(),
+            "omega": self.omega,
+            "k": self.k,
+            "f_c1": F_FAMILY["c1"], "f_c2": F_FAMILY["c2"], "f_mul": F_FAMILY["mul"],
+            "c1": self.family["c1"], "c2": self.family["c2"], "mul": self.family["mul"],
+            "double_hash": self.double_hash,
+        }
+
+    @property
+    def size_bytes(self) -> float:
+        # alpha = 1 endbit + ceil(log2(n_hash+1)) hashindex bits per cell
+        alpha = 1 + int(np.ceil(np.log2(self.n_hash + 1)))
+        return self.omega * alpha / 8.0

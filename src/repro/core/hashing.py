@@ -1,0 +1,194 @@
+"""Global hash-function family H for HABF.
+
+The paper uses |H| = 22 named C string hashers (xxHash, CityHash, ...).
+TPU adaptation (DESIGN.md §3): keys are fingerprinted to 64 bits on the
+host once; the global family H is a parameterized collection of 32-bit
+mixers (murmur3/xxhash-style finalizers with per-function odd multipliers
+and seeds).  All arithmetic is uint32 so the *same* function is computed
+by numpy on the host (construction) and by jnp / Pallas on the device
+(query) — the two must agree bit-exactly.
+
+Range reduction uses Lemire fastrange ``(h * m) >> 32`` instead of a
+modulo: TPUs have no cheap integer divide, and fastrange is exactly
+uniform for uniform h.  Host and device both use it, so indices agree.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Number of global hash functions |H| (paper §V-D3: 22 functions,
+# cell size alpha=5 bits => up to 31 representable; index 0 is reserved
+# for "empty" in HashExpressor cells, so hash indices are stored 1-based).
+DEFAULT_N_HASH = 22
+
+_M32 = np.uint32(0xFFFFFFFF)
+
+# Distinct odd multipliers / seeds per hash function, generated once from
+# splitmix64 so the family is deterministic and reproducible.
+
+
+def _splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return z ^ (z >> 31)
+
+
+def make_family(n_hash: int = DEFAULT_N_HASH, seed: int = 0x5EED):
+    """Returns dict of uint32 constant arrays of shape (n_hash,)."""
+    c1, c2, mul = [], [], []
+    x = seed
+    for _ in range(n_hash):
+        x = _splitmix64(x)
+        c1.append(x & 0xFFFFFFFF)
+        x = _splitmix64(x)
+        c2.append(x & 0xFFFFFFFF)
+        x = _splitmix64(x)
+        mul.append((x | 1) & 0xFFFFFFFF)  # odd multiplier
+    return {
+        "c1": np.asarray(c1, np.uint32),
+        "c2": np.asarray(c2, np.uint32),
+        "mul": np.asarray(mul, np.uint32),
+    }
+
+
+FAMILY = make_family()
+
+
+# --------------------------------------------------------------------------
+# numpy (host) side
+# --------------------------------------------------------------------------
+
+def _mix32_np(x: np.ndarray) -> np.ndarray:
+    """murmur3-style 32-bit finalizer (numpy uint32, wraparound intended)."""
+    with np.errstate(over="ignore"):
+        x = x.astype(np.uint32)
+        x ^= x >> np.uint32(16)
+        x = (x * np.uint32(0x7FEB352D)) & _M32
+        x ^= x >> np.uint32(15)
+        x = (x * np.uint32(0x846CA68B)) & _M32
+        x ^= x >> np.uint32(16)
+    return x
+
+
+def hash_value_np(keys_u64: np.ndarray, hash_idx, family=FAMILY) -> np.ndarray:
+    """32-bit hash values.  keys_u64: (...,) uint64.  hash_idx: int array,
+    broadcast against keys.  Returns uint32 with shape broadcast(keys, idx)."""
+    keys_u64 = np.asarray(keys_u64, np.uint64)
+    hash_idx = np.asarray(hash_idx, np.int64)
+    lo = (keys_u64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (keys_u64 >> np.uint64(32)).astype(np.uint32)
+    c1 = family["c1"][hash_idx]
+    c2 = family["c2"][hash_idx]
+    mu = family["mul"][hash_idx]
+    x = _mix32_np(lo ^ c1)
+    y = _mix32_np(hi ^ c2)
+    with np.errstate(over="ignore"):
+        h = (x * mu + (y ^ np.uint32(0x9E3779B9))) & _M32
+    return _mix32_np(h)
+
+
+def fastrange_np(h: np.ndarray, m: int) -> np.ndarray:
+    """Lemire fastrange: uniform map uint32 -> [0, m)."""
+    return ((h.astype(np.uint64) * np.uint64(m)) >> np.uint64(32)).astype(np.int64)
+
+
+def hash_index_np(keys_u64, hash_idx, m: int, family=FAMILY) -> np.ndarray:
+    return fastrange_np(hash_value_np(keys_u64, hash_idx, family), m)
+
+
+def double_hash_value_np(keys_u64: np.ndarray, i, family=FAMILY) -> np.ndarray:
+    """f-HABF double hashing (Kirsch–Mitzenmacher): g_i = h_a + i * h_b."""
+    i = np.asarray(i, np.uint32)
+    ha = hash_value_np(keys_u64, 0, family)
+    hb = hash_value_np(keys_u64, 1, family) | np.uint32(1)
+    with np.errstate(over="ignore"):
+        return (ha + i * hb) & _M32
+
+
+# --------------------------------------------------------------------------
+# jnp (device) side — must agree bit-exactly with the numpy side
+# --------------------------------------------------------------------------
+
+def _mix32_jnp(x):
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_value_jnp(key_lo, key_hi, c1, c2, mul):
+    """key_lo/key_hi: uint32 arrays; c1/c2/mul: broadcastable uint32."""
+    x = _mix32_jnp(key_lo ^ c1)
+    y = _mix32_jnp(key_hi ^ c2)
+    h = x * mul + (y ^ jnp.uint32(0x9E3779B9))
+    return _mix32_jnp(h)
+
+
+def umulhi32_jnp(a, b):
+    """High 32 bits of a*b via 16-bit limbs (uint32 only, TPU-friendly)."""
+    a = a.astype(jnp.uint32)
+    b = jnp.uint32(b) if np.isscalar(b) else b.astype(jnp.uint32)
+    a_lo = a & 0xFFFF
+    a_hi = a >> 16
+    b_lo = b & 0xFFFF
+    b_hi = b >> 16
+    t0 = a_lo * b_lo
+    t1 = a_lo * b_hi + (t0 >> 16)
+    t2 = a_hi * b_lo + (t1 & 0xFFFF)
+    return a_hi * b_hi + (t1 >> 16) + (t2 >> 16)
+
+
+def fastrange_jnp(h, m: int):
+    return umulhi32_jnp(h, np.uint32(m)).astype(jnp.int32)
+
+
+def hash_index_jnp(key_lo, key_hi, c1, c2, mul, m: int):
+    return fastrange_jnp(hash_value_jnp(key_lo, key_hi, c1, c2, mul), m)
+
+
+def split_u64(keys_u64: np.ndarray):
+    """Host-side split of uint64 keys into device-friendly (lo, hi) uint32."""
+    keys_u64 = np.asarray(keys_u64, np.uint64)
+    lo = (keys_u64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (keys_u64 >> np.uint64(32)).astype(np.uint32)
+    return lo, hi
+
+
+# --------------------------------------------------------------------------
+# byte-string fingerprinting (host only): vectorized FNV-1a 64
+# --------------------------------------------------------------------------
+
+_FNV_OFFSET = np.uint64(0xCBF29CE484222325)
+_FNV_PRIME = np.uint64(0x100000001B3)
+
+
+def fingerprint_bytes(keys: list) -> np.ndarray:
+    """Vectorized FNV-1a(64) over a list of bytes/str.  One column pass per
+    byte position — O(max_len) vector ops instead of a Python loop per key."""
+    bs = [k.encode() if isinstance(k, str) else bytes(k) for k in keys]
+    n = len(bs)
+    if n == 0:
+        return np.zeros((0,), np.uint64)
+    lens = np.asarray([len(b) for b in bs], np.int64)
+    max_len = max(1, int(lens.max()))
+    mat = np.zeros((n, max_len), np.uint8)
+    for i, b in enumerate(bs):
+        if b:
+            mat[i, : len(b)] = np.frombuffer(b, np.uint8)
+    h = np.full((n,), _FNV_OFFSET, np.uint64)
+    with np.errstate(over="ignore"):
+        for j in range(max_len):
+            valid = lens > j
+            hv = (h ^ mat[:, j].astype(np.uint64)) * _FNV_PRIME
+            h = np.where(valid, hv, h)
+        # final avalanche so short keys spread over all 64 bits
+        h ^= h >> np.uint64(33)
+        h = (h * np.uint64(0xFF51AFD7ED558CCD)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+        h ^= h >> np.uint64(33)
+    return h

@@ -1,0 +1,268 @@
+"""Learned-filter baselines (paper §II/§V-A2): LBF, Sandwiched LBF, Ada-BF.
+
+Classifier: byte-level models in pure JAX matching the paper's sizes — a
+16-dim character GRU or a 6-layer MLP over a 32-dim byte embedding —
+trained in-framework with our AdamW (no Keras).  Keys are featurized from
+their raw strings (truncated/padded to max_len bytes).
+
+LBF   (Kraska'18):  score >= tau -> positive, else backup BF over the
+                    positives the model missed.
+SLBF  (Mitzenmacher'18): initial BF -> model -> backup BF.
+AdaBF (Dai'19):     score buckets get decreasing hash counts k_j on one BF.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bloom import BloomFilter
+from ..optimizer.adamw import AdamW
+
+
+MAX_LEN = 32
+
+
+def encode_keys(keys: list, max_len: int = MAX_LEN) -> np.ndarray:
+    """(n, max_len) uint8 byte matrix (0-padded)."""
+    out = np.zeros((len(keys), max_len), np.uint8)
+    for i, s in enumerate(keys):
+        b = s.encode() if isinstance(s, str) else bytes(s)
+        b = b[:max_len]
+        out[i, : len(b)] = np.frombuffer(b, np.uint8)
+    return out
+
+
+# --------------------------------------------------------------------------
+# models
+# --------------------------------------------------------------------------
+
+def init_mlp(key, embed_dim=32, hidden=32, n_layers=6):
+    ks = jax.random.split(key, n_layers + 1)
+    params = {"embed": jax.random.normal(ks[0], (256, embed_dim)) * 0.05}
+    dims = [embed_dim] + [hidden] * (n_layers - 1) + [1]
+    for i in range(n_layers):
+        params[f"w{i}"] = (jax.random.normal(ks[i + 1], (dims[i], dims[i + 1]))
+                           * (1.0 / np.sqrt(dims[i])))
+        params[f"b{i}"] = jnp.zeros((dims[i + 1],))
+    return params
+
+
+def apply_mlp(params, bytes_mat):
+    x = params["embed"][bytes_mat]                  # (n, L, e)
+    mask = (bytes_mat > 0)[..., None]
+    x = (x * mask).sum(1) / jnp.maximum(mask.sum(1), 1)
+    i = 0
+    while f"w{i}" in params:
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if f"w{i+1}" in params:
+            x = jax.nn.relu(x)
+        i += 1
+    return x[..., 0]                                # logits
+
+
+def init_gru(key, embed_dim=16, hidden=16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(hidden)
+    return {
+        "embed": jax.random.normal(k1, (256, embed_dim)) * 0.05,
+        "wx": jax.random.normal(k2, (embed_dim, 3 * hidden)) * s,
+        "wh": jax.random.normal(k3, (hidden, 3 * hidden)) * s,
+        "b": jnp.zeros((3 * hidden,)),
+        "wo": jax.random.normal(k4, (hidden, 1)) * s,
+        "bo": jnp.zeros((1,)),
+    }
+
+
+def apply_gru(params, bytes_mat):
+    x = params["embed"][bytes_mat]                  # (n, L, e)
+    h0 = jnp.zeros((x.shape[0], params["wh"].shape[0]))
+
+    def cell(h, xt):
+        gates = xt @ params["wx"] + h @ params["wh"] + params["b"]
+        r, z, n = jnp.split(gates, 3, axis=-1)
+        r, z = jax.nn.sigmoid(r), jax.nn.sigmoid(z)
+        n = jnp.tanh(n + r * (h @ params["wh"][:, : h.shape[-1]]))
+        h = (1 - z) * n + z * h
+        return h, None
+
+    h, _ = jax.lax.scan(cell, h0, jnp.swapaxes(x, 0, 1))
+    return (h @ params["wo"] + params["bo"])[..., 0]
+
+
+def _model_bytes(params) -> int:
+    return sum(np.prod(p.shape) * 4 for p in jax.tree.leaves(params))
+
+
+def train_classifier(pos_strs, neg_strs, model: str = "mlp", seed: int = 0,
+                     epochs: int = 3, batch: int = 1024, lr: float = 3e-3,
+                     max_train: int = 60_000, min_steps: int = 200):
+    """Returns (score_fn(strs)->np.float32 scores, model_bytes)."""
+    rng = np.random.default_rng(seed)
+    pos = list(pos_strs)
+    neg = list(neg_strs)
+    if len(pos) > max_train // 2:
+        pos = [pos[i] for i in rng.choice(len(pos), max_train // 2, replace=False)]
+    if len(neg) > max_train // 2:
+        neg = [neg[i] for i in rng.choice(len(neg), max_train // 2, replace=False)]
+    xs = encode_keys(pos + neg)
+    ys = np.concatenate([np.ones(len(pos)), np.zeros(len(neg))]).astype(np.float32)
+
+    key = jax.random.PRNGKey(seed)
+    init, apply = ((init_mlp, apply_mlp) if model == "mlp"
+                   else (init_gru, apply_gru))
+    params = init(key)
+    opt = AdamW(lr=lr, weight_decay=1e-4, clip_norm=1.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        def loss_fn(p):
+            logits = apply(p, xb)
+            return jnp.mean(
+                jnp.maximum(logits, 0) - logits * yb
+                + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    n = len(xs)
+    steps_per_epoch = max(1, n // batch)
+    epochs = max(epochs, int(np.ceil(min_steps / steps_per_epoch)))
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, max(1, n - batch + 1), batch):
+            sel = perm[i : i + batch]
+            params, state, _ = step(params, state, xs[sel], ys[sel])
+
+    apply_j = jax.jit(apply)
+
+    def score_fn(strs):
+        mat = encode_keys(list(strs))
+        out = []
+        for i in range(0, len(mat), 65536):
+            out.append(np.asarray(jax.nn.sigmoid(apply_j(params, mat[i:i + 65536]))))
+        return np.concatenate(out) if out else np.zeros((0,), np.float32)
+
+    return score_fn, _model_bytes(params)
+
+
+# --------------------------------------------------------------------------
+# filters
+# --------------------------------------------------------------------------
+
+def _bf_for(keys_u64, budget_bytes, k_cap=16) -> BloomFilter:
+    m = max(64, int(budget_bytes * 8))
+    n = max(1, len(keys_u64))
+    k = int(np.clip(round(np.log(2) * m / n), 1, k_cap))
+    bf = BloomFilter(m, k)
+    if len(keys_u64):
+        bf.insert(np.asarray(keys_u64, np.uint64))
+    return bf
+
+
+@dataclass
+class LearnedBloomFilter:
+    score_fn: object
+    tau: float
+    backup: BloomFilter
+    model_bytes: int
+    pre: BloomFilter | None = None  # SLBF initial filter
+
+    def query(self, strs, keys_u64) -> np.ndarray:
+        keys = np.asarray(keys_u64, np.uint64)
+        res = np.ones(len(keys), bool)
+        if self.pre is not None:
+            res &= self.pre.query(keys)
+        s = self.score_fn(strs)
+        model_pos = s >= self.tau
+        backup_pos = self.backup.query(keys)
+        return res & (model_pos | backup_pos)
+
+    @property
+    def size_bytes(self) -> float:
+        b = self.model_bytes + self.backup.size_bytes
+        if self.pre is not None:
+            b += self.pre.size_bytes
+        return b
+
+
+def _choose_tau(pos_scores, neg_scores, backup_bytes):
+    """Minimize fpr_tau + (1-fpr_tau)*backup_fpr over tau candidates."""
+    best = (1.1, 0.5, None)
+    for q in np.linspace(0.05, 0.995, 40):
+        tau = float(np.quantile(neg_scores, q))
+        fpr_tau = float((neg_scores >= tau).mean())
+        n_fn = int((pos_scores < tau).sum())
+        bpk = backup_bytes * 8.0 / max(1, n_fn)
+        backup_fpr = 0.6185 ** bpk if n_fn else 0.0
+        total = fpr_tau + (1 - fpr_tau) * backup_fpr
+        if total < best[0]:
+            best = (total, tau, None)
+    return best[1]
+
+
+def build_lbf(pos_strs, pos_u64, neg_strs, neg_u64, total_bytes,
+              model="mlp", seed=0, sandwich=False) -> LearnedBloomFilter:
+    score_fn, mbytes = train_classifier(pos_strs, neg_strs, model=model,
+                                        seed=seed)
+    budget = max(64, total_bytes - mbytes)
+    pre = None
+    pre_bytes = 0
+    if sandwich:
+        pre_bytes = budget // 3
+        pre = _bf_for(pos_u64, pre_bytes)
+        budget -= pre_bytes
+    pos_scores = score_fn(pos_strs)
+    neg_scores = score_fn(neg_strs)
+    tau = _choose_tau(pos_scores, neg_scores, budget)
+    fn_keys = np.asarray(pos_u64, np.uint64)[pos_scores < tau]
+    backup = _bf_for(fn_keys, budget)
+    return LearnedBloomFilter(score_fn=score_fn, tau=tau, backup=backup,
+                              model_bytes=mbytes, pre=pre)
+
+
+@dataclass
+class AdaBF:
+    score_fn: object
+    taus: np.ndarray          # bucket edges (descending score)
+    ks: np.ndarray            # hashes per bucket
+    bf: BloomFilter
+    model_bytes: int
+
+    def _k_of(self, scores):
+        bucket = np.searchsorted(self.taus, scores)          # 0..g
+        return self.ks[bucket]
+
+    def query(self, strs, keys_u64) -> np.ndarray:
+        keys = np.asarray(keys_u64, np.uint64)
+        ks = self._k_of(self.score_fn(strs))
+        bits = self.bf.bits.test_bits(self.bf.key_bits(keys))
+        mask = np.arange(self.bf.k)[None, :] < ks[:, None]
+        return (bits | ~mask).all(axis=1)
+
+    @property
+    def size_bytes(self) -> float:
+        return self.model_bytes + self.bf.size_bytes
+
+
+def build_adabf(pos_strs, pos_u64, neg_strs, neg_u64, total_bytes,
+                groups=4, k_max=8, model="mlp", seed=0) -> AdaBF:
+    score_fn, mbytes = train_classifier(pos_strs, neg_strs, model=model,
+                                        seed=seed)
+    budget = max(64, total_bytes - mbytes)
+    neg_scores = score_fn(neg_strs)
+    qs = np.quantile(neg_scores, np.linspace(0.5, 0.98, groups - 1))
+    taus = np.sort(np.unique(qs))
+    ks = np.linspace(k_max, 1, len(taus) + 1).round().astype(np.int64)
+    bf = BloomFilter(max(64, budget * 8), k_max)
+    pos_scores = score_fn(pos_strs)
+    bucket = np.searchsorted(taus, pos_scores)
+    kper = ks[bucket]
+    bits = bf.key_bits(np.asarray(pos_u64, np.uint64))
+    mask = np.arange(k_max)[None, :] < kper[:, None]
+    bf.bits.set_bits(bits[mask])
+    return AdaBF(score_fn=score_fn, taus=taus, ks=ks, bf=bf,
+                 model_bytes=mbytes)

@@ -1,0 +1,24 @@
+"""Evaluation metrics (paper Eq. 1 / Eq. 20)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def weighted_fpr(pred_pos: np.ndarray, costs: np.ndarray | None = None) -> float:
+    """Weighted FPR over a *negative* key set: sum of costs of false
+    positives / total cost.  With uniform costs this is the classic FPR."""
+    pred_pos = np.asarray(pred_pos, bool)
+    if costs is None:
+        costs = np.ones(pred_pos.shape[0])
+    costs = np.asarray(costs, np.float64)
+    denom = costs.sum()
+    return float((costs * pred_pos).sum() / denom) if denom else 0.0
+
+
+def fpr(pred_pos: np.ndarray) -> float:
+    return weighted_fpr(pred_pos, None)
+
+
+def fnr(pred_pos_on_positives: np.ndarray) -> float:
+    p = np.asarray(pred_pos_on_positives, bool)
+    return float((~p).mean()) if len(p) else 0.0

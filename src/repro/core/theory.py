@@ -1,0 +1,38 @@
+"""Theoretical bounds from paper §IV (verified in benchmarks — Fig. 8)."""
+from __future__ import annotations
+
+import math
+
+
+def bf_fpr(bits_per_key: float, k: int) -> float:
+    """Classic Bloom-filter FPR (1 - e^{-k/b})^k (paper §II)."""
+    return (1.0 - math.exp(-k / bits_per_key)) ** k
+
+
+def p_xi_lower(bits_per_key: float, k: int) -> float:
+    """Theorem 4.1: E[P_xi] > (k/b) / (e^{k/b} - 1)."""
+    x = k / bits_per_key
+    return x / (math.exp(x) - 1.0)
+
+
+def p_s_lower(t: int, k: int, omega: int) -> float:
+    """Eq. 11: insertion-success probability after t optimized keys."""
+    return max(0.0, (1.0 - (k * t + k) / omega)) ** k
+
+
+def expected_optimized_lower(T: int, p_c: float, k: int, omega: int) -> float:
+    """Theorem 4.2 / Eq. 12: E[t] > T*P'_c*(omega - k^2)/(omega + T*P'_c*k^2)."""
+    if omega <= k * k:
+        return 0.0
+    return T * p_c * (omega - k * k) / (omega + T * p_c * k * k)
+
+
+def fbf_star_upper(fbf: float, T: int, p_c: float, k: int, omega: int,
+                   n_neg: int) -> float:
+    """Eq. 19: E[F*_bf] < E[F_bf] - E[t]/|O|."""
+    return fbf - expected_optimized_lower(T, p_c, k, omega) / max(1, n_neg)
+
+
+def habf_fpr_upper(fbf_star: float, t: int, omega: int) -> float:
+    """§III-F: F_habf <= (omega + t)/omega * F*_bf."""
+    return (omega + t) / omega * fbf_star

@@ -1,0 +1,262 @@
+"""Two-Phase Joint Optimization (paper §III-D).
+
+Phase-I adjusts the hash set phi(e_s) of a positive key that solely maps a
+bit hit by an expensive collision (false-positive) negative key; Phase-II
+atomically inserts the adjusted phi into the HashExpressor.  Runtime
+indices:
+
+  V     (m,)  — <singleflag, keyid, hashslot>: bits mapped by exactly one
+               (positive key, hash) pair, and by whom/which slot.
+  Gamma (m,)  — buckets of currently-negative "optimized keys" mapped to
+               each bit; used by Algorithm 1 conflict detection to charge
+               the cost of collateral collisions before flipping a bit.
+  CQ          — collision keys (negative keys currently testing positive),
+               processed in descending cost order; collateral collisions
+               are appended to the tail (paper Fig. 6).
+
+Construction is host-side (control-plane event, like LevelDB filter
+builds); the result exports flat arrays for the device-side query kernels.
+
+Fidelity notes (DESIGN.md §8):
+  * conflict detection tests "all bits of e_opk outside bucket nu are set"
+    directly on the bit vector — equivalent to Algorithm 1's
+    V.keyid != NULL test, and also correct for the (rare) key that maps to
+    nu twice, which Algorithm 1's count==k-1 misses.
+  * a positive key already adjusted once (resident in HashExpressor) is
+    not re-adjusted: its walk cells may be shared, so changing phi again
+    could corrupt other walks.  The paper is silent on re-adjustment.
+  * f-HABF (paper §III-G): double hashing + Gamma disabled (conflict
+    detection skipped entirely; collateral collisions are not tracked).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import hashing
+from .bloom import BloomFilter, DoubleHashBloomFilter
+from .hash_expressor import HashExpressor
+
+
+@dataclass
+class TPJOStats:
+    n_pos: int = 0
+    n_neg: int = 0
+    n_collision_initial: int = 0
+    n_collision_total: int = 0
+    n_optimized: int = 0
+    n_failed_insert: int = 0
+    n_failed_adjust: int = 0
+    n_skipped_cost: int = 0
+    n_side_fixed: int = 0          # collision keys fixed by earlier adjustments
+    n_adjusted_pos: int = 0
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+@dataclass
+class TPJOResult:
+    bf: BloomFilter
+    hx: HashExpressor
+    phi_pos: np.ndarray            # (|S|, k) final hash sets of positives
+    adjusted: np.ndarray           # (|S|,) bool — inserted into HashExpressor
+    stats: TPJOStats = field(default_factory=TPJOStats)
+
+
+def _bits_all_set(bf: BloomFilter, bits_row: np.ndarray) -> bool:
+    return bool(bf.bits.test_bits(bits_row).all())
+
+
+def build_tpjo(pos_keys: np.ndarray, neg_keys: np.ndarray,
+               neg_costs: np.ndarray, m_bits: int, omega: int, k: int,
+               n_hash: int = hashing.DEFAULT_N_HASH, seed: int = 0,
+               fast: bool = False, family=hashing.FAMILY,
+               max_rounds: int | None = None) -> TPJOResult:
+    """Run TPJO and return the optimized Bloom filter + HashExpressor.
+
+    fast=True builds f-HABF: double hashing + Gamma disabled.
+    """
+    rng = np.random.default_rng(seed)
+    pos_keys = np.asarray(pos_keys, np.uint64)
+    neg_keys = np.asarray(neg_keys, np.uint64)
+    neg_costs = np.ones(len(neg_keys)) if neg_costs is None else np.asarray(neg_costs, np.float64)
+    n_pos, n_neg = len(pos_keys), len(neg_keys)
+    stats = TPJOStats(n_pos=n_pos, n_neg=n_neg)
+
+    bf_cls = DoubleHashBloomFilter if fast else BloomFilter
+    bf = bf_cls(m_bits, k, family=family)
+    hx = HashExpressor(omega, k, n_hash=n_hash, family=family, double_hash=fast)
+    m = bf.bits.m
+
+    # ---- initial insertion with H0 -----------------------------------------
+    phi_pos = np.tile(np.arange(k, dtype=np.int64), (n_pos, 1))
+    pos_bits = bf.key_bits(pos_keys)                       # (n_pos, k)
+    bf.bits.set_bits(pos_bits)
+    adjusted = np.zeros((n_pos,), bool)
+
+    # ---- V: single-mapper index (vectorized construction) ------------------
+    flat = pos_bits.reshape(-1)
+    counts = np.bincount(flat, minlength=m)
+    v_keyid = np.full((m,), -1, np.int64)
+    v_hashslot = np.full((m,), -1, np.int8)
+    single_mask = counts == 1
+    # positions of the unique (key, slot) pair for single-mapped bits
+    order = np.argsort(flat, kind="stable")
+    sorted_bits = flat[order]
+    first_of_bit = np.searchsorted(sorted_bits, np.nonzero(single_mask)[0])
+    src = order[first_of_bit]
+    v_keyid[single_mask] = src // k
+    v_hashslot[single_mask] = (src % k).astype(np.int8)
+    v_single = (counts <= 1).astype(np.uint8)   # singleflag: mapped <= once
+    # bits mapped >=1 times have keyid of first mapper only when count==1;
+    # for count>1 keyid stays -1 but singleflag=0 distinguishes them.
+
+    # ---- negative key bits (fixed H0 forever) -------------------------------
+    neg_bits = bf.key_bits(neg_keys)                       # (n_neg, k)
+    neg_fp = bf.bits.test_bits(neg_bits).all(axis=1)       # collision keys
+    stats.n_collision_initial = int(neg_fp.sum())
+
+    # ---- Gamma: buckets of currently-negative keys --------------------------
+    track_gamma = not fast
+    gamma: dict[int, set] = defaultdict(set)
+    if track_gamma:
+        for o in np.nonzero(~neg_fp)[0]:
+            for b in neg_bits[o]:
+                gamma[int(b)].add(int(o))
+
+    def gamma_add(o: int):
+        for b in neg_bits[o]:
+            gamma[int(b)].add(int(o))
+
+    def gamma_remove(o: int):
+        for b in neg_bits[o]:
+            gamma[int(b)].discard(int(o))
+
+    def conflicts_if_set(w: int) -> list:
+        """Algorithm 1: optimized keys that become FP if bit w flips to 1."""
+        if not track_gamma:
+            return []
+        out = []
+        for o in gamma.get(w, ()):  # keys with some bit at w
+            row = neg_bits[o]
+            others = row[row != w]
+            if others.size == 0 or bf.bits.test_bits(others).all():
+                out.append(o)
+        return out
+
+    # ---- CQ: descending cost; collateral collisions appended at tail --------
+    ck_init = np.nonzero(neg_fp)[0]
+    cq = list(ck_init[np.argsort(-neg_costs[ck_init], kind="stable")])
+    stats.n_collision_total = len(cq)
+
+    all_hash = np.arange(n_hash, dtype=np.int64)
+    rounds = 0
+    budget = max_rounds if max_rounds is not None else 50 * max(1, n_neg)
+
+    while cq and rounds < budget:
+        rounds += 1
+        o = int(cq.pop(0))
+        row = neg_bits[o]
+        if not _bits_all_set(bf, row):
+            stats.n_side_fixed += 1
+            continue  # already fixed as a side effect
+        # xi_ck: units mapped once by a single (not-yet-adjusted) positive key
+        cand_units = [int(u) for u in row
+                      if v_single[u] == 1 and v_keyid[u] >= 0
+                      and not adjusted[v_keyid[u]]]
+        fixed = False
+        for u in cand_units:
+            s = int(v_keyid[u])
+            slot = int(v_hashslot[u])
+            phi_s = phi_pos[s]
+            h_u = int(phi_s[slot])
+            hc = np.setdiff1d(all_hash, phi_s, assume_unique=False)
+            if hc.size == 0:
+                continue
+            # candidate replacement bits for e_s under each h_c
+            w_bits = bf.key_bits(np.asarray([pos_keys[s]]), phi=hc[None, :])[0]
+            set_already = bf.bits.test_bits(w_bits).astype(bool)
+            # rank candidates: (0) target bit already 1 — zero damage;
+            # (1) clean bucket; (2) damaged bucket with min cost <= Theta(e_ck)
+            zero_damage = [(int(h), int(w)) for h, w, sb in zip(hc, w_bits, set_already) if sb]
+            clean, damaged = [], []
+            for h, w, sb in zip(hc, w_bits, set_already):
+                if sb:
+                    continue
+                if w == u:
+                    continue  # replacing h_u with a hash mapping to the same bit is useless
+                zeta = conflicts_if_set(int(w))
+                if not zeta:
+                    clean.append((int(h), int(w)))
+                else:
+                    cost_w = float(neg_costs[zeta].sum()) if zeta else 0.0
+                    damaged.append((cost_w, int(h), int(w), zeta))
+            # phase-II: try zero-damage + clean candidates.  HABF ranks all
+            # insertable plans by overlap (fewest new writes); f-HABF takes
+            # the first fit (§III-G: speed over selection quality).
+            trials = []
+            for h, w in zero_damage + clean:
+                new_phi = phi_s.copy()
+                new_phi[slot] = h
+                ok, plan = hx.plan_insert(pos_keys[s], new_phi, rng)
+                if ok:
+                    trials.append((plan[2], h, w, None, plan))
+                    if fast:
+                        break
+            chosen = min(trials, key=lambda t: (t[0], t[1])) if trials else None
+            if chosen is None and damaged:
+                damaged.sort(key=lambda t: (t[0], t[1]))
+                for cost_w, h, w, zeta in damaged:
+                    if cost_w > float(neg_costs[o]):
+                        stats.n_skipped_cost += 1
+                        break  # sorted: all further are worse
+                    new_phi = phi_s.copy()
+                    new_phi[slot] = h
+                    ok, plan = hx.plan_insert(pos_keys[s], new_phi, rng)
+                    if ok:
+                        chosen = (plan[2], h, w, zeta, plan)
+                        break
+                    stats.n_failed_insert += 1
+            if chosen is None:
+                continue
+            _, h_new, w, zeta, plan = chosen
+            # ---- commit ------------------------------------------------------
+            new_phi = phi_s.copy()
+            new_phi[slot] = h_new
+            hx.commit_plan(plan)
+            phi_pos[s] = new_phi
+            adjusted[s] = True
+            stats.n_adjusted_pos += 1
+            # Bloom filter: clear the solely-mapped bit u, set bit w
+            bf.bits.clear_bit(u)
+            bf.bits.set_bits(np.asarray([w]))
+            # V updates: reset u; account e_s mapping at w
+            v_single[u] = 1
+            v_keyid[u] = -1
+            v_hashslot[u] = -1
+            if v_keyid[w] == -1 and v_single[w] == 1:
+                # empty unit: e_s is now its only mapper... but only if the
+                # bit was previously unmapped by positives (count==0)
+                v_keyid[w] = s
+                v_hashslot[w] = np.int8(slot)
+            elif v_single[w] == 1:
+                v_single[w] = 0
+            # collateral collisions -> tail of CQ; e_ck becomes optimized
+            if zeta:
+                for oc in zeta:
+                    gamma_remove(oc)
+                    cq.append(oc)
+                    stats.n_collision_total += 1
+            if track_gamma:
+                gamma_add(o)
+            stats.n_optimized += 1
+            fixed = True
+            break
+        if not fixed:
+            stats.n_failed_adjust += 1
+
+    return TPJOResult(bf=bf, hx=hx, phi_pos=phi_pos, adjusted=adjusted,
+                      stats=stats)

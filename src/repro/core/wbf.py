@@ -1,0 +1,60 @@
+"""Weighted Bloom filter baseline (Bruck, Gao & Jiang 2006), paper §II.
+
+Keys with higher query frequency / cost get more hash functions:
+  k_e = clamp(round(k_bar + log2(theta(e) / geometric_mean(theta))), 1, k_max)
+
+At query time WBF needs the key's cost to recover k_e; per the paper's
+setup we cache the top-cost keys' k_e in a host-side dict and fall back to
+k_bar for uncached keys (the cache is charged to construction memory).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .bloom import BloomFilter
+
+
+class WeightedBloomFilter:
+    def __init__(self, m_bits: int, k_bar: int, k_max: int = 8,
+                 cache_fraction: float = 0.05):
+        self.bf = BloomFilter(m_bits, k_max)          # holds k_max hash fns
+        self.k_bar = int(max(1, k_bar))
+        self.k_max = int(k_max)
+        self.cache_fraction = float(cache_fraction)
+        self.k_cache: dict[int, int] = {}
+
+    def _k_for(self, costs: np.ndarray) -> np.ndarray:
+        c = np.maximum(np.asarray(costs, np.float64), 1e-12)
+        geo = np.exp(np.mean(np.log(c)))
+        k = np.round(self.k_bar + np.log2(c / geo)).astype(np.int64)
+        return np.clip(k, 1, self.k_max)
+
+    def build(self, pos_keys: np.ndarray, pos_costs: np.ndarray | None) -> None:
+        keys = np.asarray(pos_keys, np.uint64)
+        costs = (np.ones(len(keys)) if pos_costs is None
+                 else np.asarray(pos_costs, np.float64))
+        ks = self._k_for(costs)
+        bits = self.bf.key_bits(keys)                  # (n, k_max)
+        mask = np.arange(self.k_max)[None, :] < ks[:, None]
+        self.bf.bits.set_bits(bits[mask])
+        # cache k for the most expensive keys (query-side retrieval)
+        n_cache = int(len(keys) * self.cache_fraction)
+        if n_cache:
+            top = np.argsort(-costs, kind="stable")[:n_cache]
+            self.k_cache = {int(keys[i]): int(ks[i]) for i in top}
+
+    def query(self, keys_u64: np.ndarray,
+              costs: np.ndarray | None = None) -> np.ndarray:
+        keys = np.asarray(keys_u64, np.uint64).reshape(-1)
+        if costs is not None:
+            ks = self._k_for(costs)
+        else:
+            ks = np.asarray([self.k_cache.get(int(x), self.k_bar) for x in keys],
+                            np.int64)
+        bits_set = self.bf.bits.test_bits(self.bf.key_bits(keys))  # (n, k_max)
+        mask = np.arange(self.k_max)[None, :] < ks[:, None]
+        return (bits_set | ~mask).all(axis=1)
+
+    @property
+    def size_bytes(self) -> float:
+        return self.bf.size_bytes

@@ -1,0 +1,115 @@
+"""Xor filter baseline (Graf & Lemire 2020), paper §V-A.
+
+Static filter: each key is mapped to 3 slots (one per table third); the
+b-bit fingerprint of a key equals the xor of its 3 slots.  Construction
+uses the standard hypergraph peeling; capacity 1.23|S| + 32 per the paper
+(fingerprint bits = floor(b / (1.23 + 32/|S|)) for bits-per-key b).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import hashing
+
+_FP_FAMILY = hashing.make_family(4, seed=0x0F0F)
+
+
+def _slots(keys: np.ndarray, seg_len: int, seed_round: int) -> np.ndarray:
+    """(n, 3) slot indices, one per segment third."""
+    out = np.empty((len(keys), 3), np.int64)
+    for j in range(3):
+        hv = hashing.hash_value_np(keys ^ np.uint64(seed_round * 0x9E3779B97F4A7C15
+                                                    & 0xFFFFFFFFFFFFFFFF),
+                                   j, _FP_FAMILY)
+        out[:, j] = hashing.fastrange_np(hv, seg_len) + j * seg_len
+    return out
+
+
+def _fingerprint(keys: np.ndarray, bits: int) -> np.ndarray:
+    hv = hashing.hash_value_np(keys, 3, _FP_FAMILY).astype(np.uint32)
+    fp = hv & np.uint32((1 << bits) - 1)
+    return np.maximum(fp, 1).astype(np.uint32)  # avoid 0 fingerprints
+
+
+class XorFilter:
+    def __init__(self, keys_u64: np.ndarray, fingerprint_bits: int = 8,
+                 max_rounds: int = 64):
+        keys = np.unique(np.asarray(keys_u64, np.uint64))
+        self.fp_bits = int(max(1, min(fingerprint_bits, 32)))
+        n = max(1, len(keys))
+        seg = int(np.ceil(1.23 * n / 3)) + 11
+        self.seg_len = seg
+        self.table = np.zeros((3 * seg,), np.uint32)
+        self.seed_round = self._peel_and_assign(keys, max_rounds)
+
+    # -- construction: peeling ------------------------------------------------
+    def _peel_and_assign(self, keys: np.ndarray, max_rounds: int) -> int:
+        n = len(keys)
+        for rnd in range(max_rounds):
+            slots = _slots(keys, self.seg_len, rnd)
+            deg = np.bincount(slots.reshape(-1), minlength=3 * self.seg_len)
+            # peel: repeatedly remove keys that own a degree-1 slot
+            slot_owner = np.full((3 * self.seg_len,), -1, np.int64)
+            # build inverted index lazily via sorting
+            stack: list[tuple[int, int]] = []  # (key_idx, slot)
+            alive = np.ones((n,), bool)
+            # queue of degree-1 slots
+            from collections import deque
+            flat = slots.reshape(-1)
+            order = np.argsort(flat, kind="stable")
+            starts = np.searchsorted(flat[order], np.arange(3 * self.seg_len))
+            ends = np.searchsorted(flat[order], np.arange(3 * self.seg_len) + 1)
+
+            def keys_at(slot):
+                return order[starts[slot]:ends[slot]] // 3
+
+            q = deque(np.nonzero(deg == 1)[0].tolist())
+            deg = deg.copy()
+            while q:
+                slot = q.popleft()
+                if deg[slot] != 1:
+                    continue
+                cand = [ki for ki in keys_at(slot) if alive[ki]]
+                if not cand:
+                    continue
+                ki = cand[0]
+                stack.append((ki, slot))
+                alive[ki] = False
+                for s2 in slots[ki]:
+                    deg[s2] -= 1
+                    if deg[s2] == 1:
+                        q.append(int(s2))
+            if alive.any():
+                continue  # peeling failed; retry with fresh hash seeds
+            # assign in reverse peel order
+            self.table[:] = 0
+            fps = _fingerprint(keys, self.fp_bits)
+            for ki, slot in reversed(stack):
+                s0, s1, s2 = slots[ki]
+                want = fps[ki]
+                self.table[slot] = want ^ self.table[s0] ^ self.table[s1] ^ self.table[s2] ^ self.table[slot]
+            self._slots_cache_round = rnd
+            return rnd
+        raise RuntimeError("xor filter peeling failed after max_rounds")
+
+    # -- query ------------------------------------------------------------------
+    def query(self, keys_u64: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys_u64, np.uint64).reshape(-1)
+        slots = _slots(keys, self.seg_len, self.seed_round)
+        fp = _fingerprint(keys, self.fp_bits)
+        got = (self.table[slots[:, 0]] ^ self.table[slots[:, 1]]
+               ^ self.table[slots[:, 2]])
+        return got == fp
+
+    @property
+    def size_bytes(self) -> float:
+        return self.table.shape[0] * self.fp_bits / 8.0
+
+
+def xor_filter_for_space(keys_u64: np.ndarray, total_bytes: int) -> XorFilter:
+    """Pick fingerprint bits to fill the given space (paper §V-A formula)."""
+    n = max(1, len(np.unique(np.asarray(keys_u64, np.uint64))))
+    bpk = total_bytes * 8.0 / n
+    bits = int(bpk / (1.23 + 32.0 / n))
+    bits = max(2, min(bits, 32))
+    return XorFilter(keys_u64, fingerprint_bits=bits)

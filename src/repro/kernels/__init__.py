@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the HABF hot paths (validated in interpret mode
+on CPU; see each kernel's ref.py for the pure-jnp oracle)."""
+from .bloom_query.ops import bloom_query, bloom_query_u64
+from .habf_query.ops import habf_query, habf_query_u64, device_tables
+from .ngram_blocklist.ops import ngram_blocklist, build_blocklist_bf
+
+__all__ = ["bloom_query", "bloom_query_u64", "habf_query", "habf_query_u64",
+           "device_tables", "ngram_blocklist", "build_blocklist_bf"]

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused k-hash Bloom-filter probe.
+
+TPU adaptation (DESIGN.md §3): the *entire* word-packed bit vector stays
+resident in VMEM (paper-default 2 MB filter ≪ 16 MB VMEM) via a
+full-array BlockSpec; keys are streamed HBM→VMEM in (8, 128)-aligned
+blocks.  All hashing is uint32 VPU arithmetic (no modulo — Lemire
+fastrange via 16-bit-limb mulhi); the k probes are unrolled and combined
+with a predicated AND, so there is no divergent control flow.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import common
+
+# keys per grid step: one (8, 128) vreg tile times 8 sublanes-rows
+BLOCK = 1024
+_SUB = 8
+_LANE = 128
+
+
+def _kernel(lo_ref, hi_ref, words_ref, c1_ref, c2_ref, mul_ref, out_ref,
+            *, m: int, k: int, double_hash: bool):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    words = words_ref[...]
+    acc = jnp.ones(lo.shape, jnp.uint32)
+    for j in range(k):
+        if double_hash:
+            hv = common.double_hash_value(lo, hi, j, c1_ref[...], c2_ref[...],
+                                          mul_ref[...])
+        else:
+            hv = common.hash_value(lo, hi, c1_ref[j], c2_ref[j], mul_ref[j])
+        idx = common.fastrange(hv, m)
+        word = jnp.take(words, (idx >> 5).astype(jnp.int32).reshape(-1),
+                        axis=0, mode="clip").reshape(idx.shape)
+        acc = acc & ((word >> (idx & 31).astype(jnp.uint32)) & jnp.uint32(1))
+    out_ref[...] = acc
+
+
+def bloom_query_pallas(key_lo, key_hi, words, c1, c2, mul, m: int, k: int,
+                       double_hash: bool = False,
+                       interpret: bool | None = None):
+    """(n,) uint32 key halves -> (n,) uint32 membership flags (0/1)."""
+    if interpret is None:
+        interpret = common.TPU_INTERPRET
+    (lo_p, n) = common.pad_to(key_lo, BLOCK)
+    (hi_p, _) = common.pad_to(key_hi, BLOCK)
+    nb = lo_p.shape[0] // BLOCK
+    lo2 = lo_p.reshape(nb * _SUB, _LANE)
+    hi2 = hi_p.reshape(nb * _SUB, _LANE)
+
+    grid = (nb,)
+    kern = partial(_kernel, m=m, k=k, double_hash=double_hash)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_SUB, _LANE), lambda i: (i, 0)),   # keys lo
+            pl.BlockSpec((_SUB, _LANE), lambda i: (i, 0)),   # keys hi
+            pl.BlockSpec(words.shape, lambda i: (0,)),       # filter: VMEM-resident
+            pl.BlockSpec(c1.shape, lambda i: (0,)),
+            pl.BlockSpec(c2.shape, lambda i: (0,)),
+            pl.BlockSpec(mul.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_SUB, _LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * _SUB, _LANE), jnp.uint32),
+        interpret=interpret,
+    )(lo2, hi2, words, c1, c2, mul)
+    return out.reshape(-1)[:n]

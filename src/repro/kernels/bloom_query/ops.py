@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the Bloom-query kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import hashing
+from .kernel import bloom_query_pallas
+from .ref import bloom_query_ref
+
+
+@partial(jax.jit, static_argnames=("m", "k", "double_hash", "use_kernel",
+                                   "interpret"))
+def bloom_query(key_lo, key_hi, words, c1, c2, mul, *, m: int, k: int,
+                double_hash: bool = False, use_kernel: bool = True,
+                interpret: bool | None = None):
+    if use_kernel:
+        out = bloom_query_pallas(key_lo, key_hi, words, c1, c2, mul, m, k,
+                                 double_hash=double_hash, interpret=interpret)
+        return out.astype(jnp.bool_)
+    return bloom_query_ref(key_lo, key_hi, words, c1, c2, mul, m, k,
+                           double_hash=double_hash)
+
+
+def bloom_query_u64(bf, keys_u64: np.ndarray, use_kernel: bool = True):
+    """Convenience: query a host-side BloomFilter object on device."""
+    t = bf.device_tables()
+    lo, hi = hashing.split_u64(keys_u64)
+    fam_idx = t["hash_idx"]
+    dh = bf.__class__.__name__.startswith("DoubleHash")
+    c1 = t["c1"] if dh else t["c1"][fam_idx]
+    c2 = t["c2"] if dh else t["c2"][fam_idx]
+    mul = t["mul"] if dh else t["mul"][fam_idx]
+    return bloom_query(jnp.asarray(lo), jnp.asarray(hi),
+                       jnp.asarray(t["words"]), jnp.asarray(c1),
+                       jnp.asarray(c2), jnp.asarray(mul),
+                       m=t["m"], k=len(fam_idx), double_hash=dh,
+                       use_kernel=use_kernel)

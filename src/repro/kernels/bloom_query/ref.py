@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the batched Bloom-filter query (round 1 of HABF)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import common
+
+
+def bloom_query_ref(key_lo, key_hi, words, c1, c2, mul, m: int, k: int,
+                    double_hash: bool = False):
+    """key_lo/key_hi: (n,) uint32.  words: (W,) uint32 bit vector.
+    c1/c2/mul: (>=k,) uint32 per-hash constants (for double hashing only
+    rows 0..1 are used as the two base mixers).  Returns (n,) bool."""
+    acc = jnp.ones(key_lo.shape, jnp.uint32)
+    for j in range(k):
+        if double_hash:
+            hv = common.double_hash_value(key_lo, key_hi, j, c1, c2, mul)
+        else:
+            hv = common.hash_value(key_lo, key_hi, c1[j], c2[j], mul[j])
+        idx = common.fastrange(hv, m)
+        acc = acc & common.probe_bits(words, idx)
+    return acc.astype(jnp.bool_)

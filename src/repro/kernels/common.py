@@ -1,0 +1,57 @@
+"""Shared device-side hashing helpers for the filter kernels.
+
+All functions are jnp-only (traceable inside Pallas kernel bodies and in
+the pure-jnp reference oracles).  They mirror `core.hashing`'s numpy
+implementations bit-exactly — tested in tests/test_hashing.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.hashing import (_mix32_jnp, hash_value_jnp, umulhi32_jnp,
+                            fastrange_jnp)
+
+TPU_INTERPRET = jax.default_backend() != "tpu"  # interpret kernels off-TPU
+
+
+def mix32(x):
+    return _mix32_jnp(x)
+
+
+def hash_value(key_lo, key_hi, c1, c2, mul):
+    return hash_value_jnp(key_lo, key_hi, c1, c2, mul)
+
+
+def double_hash_value(key_lo, key_hi, i, c1, c2, mul):
+    """f-HABF double hashing: g_i = h_a + i * h_b (i may be a vector)."""
+    ha = hash_value_jnp(key_lo, key_hi, c1[0], c2[0], mul[0])
+    hb = hash_value_jnp(key_lo, key_hi, c1[1], c2[1], mul[1]) | jnp.uint32(1)
+    return ha + jnp.asarray(i, jnp.uint32) * hb
+
+
+def fastrange(h, m):
+    return fastrange_jnp(h, m)
+
+
+def probe_bits(words, idx):
+    """Gather bit `idx` from a word-packed uint32 bit vector.
+
+    TPU note: `jnp.take` over a VMEM-resident 1-D uint32 array lowers to a
+    lane gather on current Mosaic; the whole filter (paper default 2 MB)
+    is pinned in VMEM by the caller's BlockSpec, so probes never touch HBM.
+    """
+    word = jnp.take(words, (idx >> 5).astype(jnp.int32), axis=0,
+                    mode="clip")
+    return (word >> (idx & 31).astype(jnp.uint32)) & jnp.uint32(1)
+
+
+def pad_to(x: jnp.ndarray, mult: int, axis: int = 0, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused two-round HABF query.
+
+Both tables (Bloom bit vector + HashExpressor cell arrays) are pinned in
+VMEM via full-array BlockSpecs; keys stream through in (8,128) tiles.
+The k-step pointer walk is a fixed-trip-count unrolled loop of lane
+gathers — no data-dependent control flow (branchless predication instead
+of the paper's early exits; see DESIGN.md §3)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import common
+
+BLOCK = 1024
+_SUB = 8
+_LANE = 128
+
+
+def _gather(arr, idx):
+    return jnp.take(arr, idx.reshape(-1).astype(jnp.int32), axis=0,
+                    mode="clip").reshape(idx.shape)
+
+
+def _kernel(lo_ref, hi_ref, words_ref, hidx_ref, end_ref,
+            c1_ref, c2_ref, mul_ref, f_ref, h0_ref, out_ref,
+            *, m: int, omega: int, k: int, double_hash: bool):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    words = words_ref[...]
+    hashidx = hidx_ref[...]
+    endbit = end_ref[...]
+    c1, c2, mul = c1_ref[...], c2_ref[...], mul_ref[...]
+    f_c1, f_c2, f_mul = f_ref[0], f_ref[1], f_ref[2]
+
+    def probe(idx):
+        word = _gather(words, idx >> 5)
+        return (word >> (idx & 31).astype(jnp.uint32)) & jnp.uint32(1)
+
+    # round 1 (H0)
+    r1 = jnp.ones(lo.shape, jnp.uint32)
+    for j in range(k):
+        if double_hash:
+            hv = common.double_hash_value(lo, hi, h0_ref[j], c1, c2, mul)
+        else:
+            hj = h0_ref[j]
+            hv = common.hash_value(lo, hi, _gather(c1, jnp.full(lo.shape, hj)),
+                                   _gather(c2, jnp.full(lo.shape, hj)),
+                                   _gather(mul, jnp.full(lo.shape, hj)))
+        r1 = r1 & probe(common.fastrange(hv, m))
+
+    # walk + round 2
+    cell = common.fastrange(common.hash_value(lo, hi, f_c1, f_c2, f_mul),
+                            omega)
+    valid = jnp.ones(lo.shape, jnp.uint32)
+    r2 = jnp.ones(lo.shape, jnp.uint32)
+    last_end = jnp.zeros(lo.shape, jnp.uint32)
+    for step in range(k):
+        content = _gather(hashidx, cell).astype(jnp.int32)
+        valid = valid & (content > 0).astype(jnp.uint32)
+        hidx = jnp.maximum(content - 1, 0)
+        if double_hash:
+            hv = common.double_hash_value(lo, hi, hidx, c1, c2, mul)
+        else:
+            hv = common.hash_value(lo, hi, _gather(c1, hidx),
+                                   _gather(c2, hidx), _gather(mul, hidx))
+        r2 = r2 & probe(common.fastrange(hv, m))
+        last_end = _gather(endbit, cell).astype(jnp.uint32)
+        if step + 1 < k:
+            cell = common.fastrange(hv, omega)
+    out_ref[...] = r1 | (valid & last_end & r2)
+
+
+def habf_query_pallas(key_lo, key_hi, words, hx_hashidx, hx_endbit,
+                      c1, c2, mul, f_consts, h0_idx,
+                      m: int, omega: int, k: int, double_hash: bool = False,
+                      interpret: bool | None = None):
+    if interpret is None:
+        interpret = common.TPU_INTERPRET
+    (lo_p, n) = common.pad_to(key_lo, BLOCK)
+    (hi_p, _) = common.pad_to(key_hi, BLOCK)
+    nb = lo_p.shape[0] // BLOCK
+    lo2 = lo_p.reshape(nb * _SUB, _LANE)
+    hi2 = hi_p.reshape(nb * _SUB, _LANE)
+    # uint8 tables -> int32 for clean VMEM gathers
+    hidx32 = hx_hashidx.astype(jnp.int32)
+    end32 = hx_endbit.astype(jnp.int32)
+
+    kern = partial(_kernel, m=m, omega=omega, k=k, double_hash=double_hash)
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: tuple(0 for _ in a.shape))
+    out = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((_SUB, _LANE), lambda i: (i, 0)),
+            pl.BlockSpec((_SUB, _LANE), lambda i: (i, 0)),
+            full(words), full(hidx32), full(end32),
+            full(c1), full(c2), full(mul), full(f_consts), full(h0_idx),
+        ],
+        out_specs=pl.BlockSpec((_SUB, _LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * _SUB, _LANE), jnp.uint32),
+        interpret=interpret,
+    )(lo2, hi2, words, hidx32, end32, c1, c2, mul, f_consts, h0_idx)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused two-round HABF query.
+
+Branchless TPU formulation of the paper's query (§III-E): round 1 (H0),
+the k-step HashExpressor walk, and round 2 (customized phi) are evaluated
+for every key; the result is `r1 | (walk_valid & endbit & r2)`.  The same
+32-bit hash value per retrieved hash index drives both the next walk cell
+(fastrange to omega) and the round-2 bit probe (fastrange to m), exactly
+as on the host."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import common
+
+
+def habf_query_ref(key_lo, key_hi, words, hx_hashidx, hx_endbit,
+                   c1, c2, mul, f_c1, f_c2, f_mul, h0_idx,
+                   m: int, omega: int, k: int, double_hash: bool = False):
+    """Returns (n,) bool membership."""
+    # ---- round 1: H0 ------------------------------------------------------
+    r1 = jnp.ones(key_lo.shape, jnp.uint32)
+    for j in range(k):
+        if double_hash:
+            hv = common.double_hash_value(key_lo, key_hi, h0_idx[j], c1, c2, mul)
+        else:
+            hv = common.hash_value(key_lo, key_hi, c1[h0_idx[j]],
+                                   c2[h0_idx[j]], mul[h0_idx[j]])
+        r1 = r1 & common.probe_bits(words, common.fastrange(hv, m))
+
+    # ---- HashExpressor walk + round 2 --------------------------------------
+    cell = common.fastrange(
+        common.hash_value(key_lo, key_hi, f_c1[0], f_c2[0], f_mul[0]), omega)
+    valid = jnp.ones(key_lo.shape, jnp.uint32)
+    r2 = jnp.ones(key_lo.shape, jnp.uint32)
+    last_end = jnp.zeros(key_lo.shape, jnp.uint32)
+    for step in range(k):
+        content = jnp.take(hx_hashidx, cell, axis=0, mode="clip").astype(jnp.int32)
+        valid = valid & (content > 0).astype(jnp.uint32)
+        hidx = jnp.maximum(content - 1, 0)
+        if double_hash:
+            hv = common.double_hash_value(key_lo, key_hi, hidx, c1, c2, mul)
+        else:
+            hv = common.hash_value(key_lo, key_hi,
+                                   jnp.take(c1, hidx, mode="clip"),
+                                   jnp.take(c2, hidx, mode="clip"),
+                                   jnp.take(mul, hidx, mode="clip"))
+        r2 = r2 & common.probe_bits(words, common.fastrange(hv, m))
+        last_end = jnp.take(hx_endbit, cell, axis=0, mode="clip").astype(jnp.uint32)
+        if step + 1 < k:
+            cell = common.fastrange(hv, omega)
+    return (r1 | (valid & last_end & r2)).astype(jnp.bool_)

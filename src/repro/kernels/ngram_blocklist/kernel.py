@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused rolling n-gram fingerprint + Bloom probe.
+
+Fuses the serving hot path: instead of materializing (B, T) fingerprints
+in HBM and launching a separate probe, each tile of tokens is hashed and
+probed in-register.  Tiling: grid over batch rows; each step processes
+(_BT, T) token rows — a 32k-token row is 128 KB, so a full row tile plus
+the VMEM-resident blocklist fits comfortably (the n-gram window then
+needs no halo exchange between tiles).  The n-token window is combined
+with static shifts (jnp.pad + slice), so there is no data-dependent
+control flow."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import common
+from .ref import _POS
+
+_BT = 8  # batch rows per grid step
+
+
+def _kernel(tok_ref, words_ref, c1_ref, c2_ref, mul_ref, out_ref,
+            *, m: int, k: int, n: int, t_total: int):
+    tok = tok_ref[...].astype(jnp.uint32)          # (_BT, Tp)
+    words = words_ref[...]
+    lo = jnp.zeros_like(tok)
+    hi = jnp.zeros_like(tok)
+    for i in range(n):
+        shifted = jnp.pad(tok, ((0, 0), (i, 0)))[:, : tok.shape[1]]
+        e = common.mix32(shifted ^ jnp.uint32(_POS[i % len(_POS)]))
+        lo = lo + e * jnp.uint32(2 * i + 1)
+        hi = hi ^ common.mix32(e + jnp.uint32(i))
+    lo, hi = common.mix32(lo), common.mix32(hi ^ lo)
+    acc = jnp.ones_like(tok)
+    for j in range(k):
+        hv = common.hash_value(lo, hi, c1_ref[j], c2_ref[j], mul_ref[j])
+        idx = common.fastrange(hv, m)
+        word = jnp.take(words, (idx >> 5).astype(jnp.int32).reshape(-1),
+                        axis=0, mode="clip").reshape(idx.shape)
+        acc = acc & ((word >> (idx & 31).astype(jnp.uint32)) & jnp.uint32(1))
+    pos = jnp.arange(tok.shape[1])[None, :]
+    valid = (pos >= n - 1) & (pos < t_total)
+    out_ref[...] = acc & valid.astype(jnp.uint32)
+
+
+def ngram_blocklist_pallas(tokens, words, c1, c2, mul, m: int, k: int,
+                           n: int, interpret: bool | None = None):
+    """tokens (B, T) int32 -> (B, T) uint32 hit flags."""
+    if interpret is None:
+        interpret = common.TPU_INTERPRET
+    B, T = tokens.shape
+    tp, _ = common.pad_to(tokens, 128, axis=1)
+    tp, _ = common.pad_to(tp, _BT, axis=0)
+    Bp, Tp = tp.shape
+
+    kern = partial(_kernel, m=m, k=k, n=n, t_total=T)
+    out = pl.pallas_call(
+        kern,
+        grid=(Bp // _BT,),
+        in_specs=[
+            pl.BlockSpec((_BT, Tp), lambda i: (i, 0)),
+            pl.BlockSpec(words.shape, lambda i: (0,)),
+            pl.BlockSpec(c1.shape, lambda i: (0,)),
+            pl.BlockSpec(c2.shape, lambda i: (0,)),
+            pl.BlockSpec(mul.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BT, Tp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Tp), jnp.uint32),
+        interpret=interpret,
+    )(tp, words, c1, c2, mul)
+    return out[:B, :T]

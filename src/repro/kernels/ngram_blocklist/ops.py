@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the fused n-gram blocklist scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import ngram_blocklist_pallas
+from .ref import ngram_blocklist_ref, ngram_fingerprints
+
+
+@partial(jax.jit, static_argnames=("m", "k", "n", "use_kernel", "interpret"))
+def ngram_blocklist(tokens, words, c1, c2, mul, *, m: int, k: int, n: int,
+                    use_kernel: bool = True, interpret: bool | None = None):
+    if use_kernel:
+        out = ngram_blocklist_pallas(tokens, words, c1, c2, mul, m, k, n,
+                                     interpret=interpret)
+        return out.astype(jnp.bool_)
+    return ngram_blocklist_ref(tokens, words, c1, c2, mul, m, k, n)
+
+
+def build_blocklist_bf(ngrams: np.ndarray, m_bits: int, k: int):
+    """Host helper: build a Bloom blocklist over (n_entries, n) token
+    n-grams using the *same* fingerprint scheme as the kernel, so device
+    scans agree with host inserts."""
+    from ...core.bloom import BloomFilter
+
+    toks = jnp.asarray(ngrams, jnp.int32)
+    lo, hi = ngram_fingerprints(toks, toks.shape[1])
+    fp = (np.asarray(hi[:, -1], np.uint64) << np.uint64(32)) | \
+        np.asarray(lo[:, -1], np.uint64)
+    bf = BloomFilter(m_bits, k)
+    bf.insert(fp)
+    return bf

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle: rolling n-gram fingerprints of a token batch, probed
+against a word-packed Bloom blocklist (decode-path integration of HABF's
+filters; DESIGN.md §2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import common
+
+# positional salts for n-gram combination (distinct odd constants; kept as
+# Python ints so kernel bodies bake them in as scalars, not captured arrays)
+_POS = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F,
+        0x165667B1, 0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35)
+
+
+def ngram_fingerprints(tokens, n: int):
+    """tokens (B, T) int32 -> (lo, hi) uint32 fingerprints of the trailing
+    n-gram ending at each position; positions < n-1 fold in zero padding."""
+    t = tokens.astype(jnp.uint32)
+    lo = jnp.zeros(t.shape, jnp.uint32)
+    hi = jnp.zeros(t.shape, jnp.uint32)
+    for i in range(n):
+        shifted = jnp.pad(t, ((0, 0), (i, 0)))[:, : t.shape[1]]
+        e = common.mix32(shifted ^ jnp.uint32(_POS[i % len(_POS)]))
+        lo = lo + e * jnp.uint32(2 * i + 1)
+        hi = hi ^ common.mix32(e + jnp.uint32(i))
+    return common.mix32(lo), common.mix32(hi ^ lo)
+
+
+def ngram_blocklist_ref(tokens, words, c1, c2, mul, m: int, k: int, n: int):
+    """Returns (B, T) bool — True where the trailing n-gram hits the list."""
+    lo, hi = ngram_fingerprints(tokens, n)
+    acc = jnp.ones(lo.shape, jnp.uint32)
+    for j in range(k):
+        hv = common.hash_value(lo, hi, c1[j], c2[j], mul[j])
+        acc = acc & common.probe_bits(words, common.fastrange(hv, m))
+    # positions without a complete n-gram never match
+    pos = jnp.arange(tokens.shape[1])[None, :]
+    return (acc & (pos >= n - 1)).astype(jnp.bool_)

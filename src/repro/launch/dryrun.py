@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST be the first two lines — before ANY other import (jax locks the
+# device count on first init).  Deliberately NOT set globally: smoke tests
+# and benchmarks see 1 device.
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape)
+# cell against ShapeDtypeStruct inputs on the production mesh, and record
+# memory_analysis / cost_analysis / the collective-op table for §Roofline.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--both-meshes]
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, SHAPES, accum_for
+from ..configs.base import ACCUM_STEPS
+from ..models.model import Model
+from ..runtime import sharding as sh
+from ..runtime.train_loop import (make_train_step, make_optimizer,
+                                  param_shardings, opt_state_shardings,
+                                  batch_shardings, metrics_shardings)
+from ..runtime.serve_loop import make_prefill_step, make_decode_step
+from .mesh import make_production_mesh
+from . import hlo_analysis
+
+# ---- per-(arch, shape) microbatch accumulation (activation fitting) --------
+ACCUM_STEPS.update({
+    ("llama3-405b", "train_4k"): 16,
+    ("llama4-maverick-400b-a17b", "train_4k"): 16,
+    ("mistral-nemo-12b", "train_4k"): 8,
+    ("llava-next-mistral-7b", "train_4k"): 8,
+    ("deepseek-v2-lite-16b", "train_4k"): 8,
+    ("mistral-nemo-12b", "prefill_32k"): 1,
+})
+
+# 400B-class train cells use Adafactor (factored second moments) — the
+# AdamW variant exceeds the 16 GB budget (peak 17.7 GiB; §Perf A7)
+OPT_KIND = {
+    ("llama3-405b", "train_4k"): "adafactor",
+    ("llama4-maverick-400b-a17b", "train_4k"): "adafactor",
+}
+
+# long_500k requires sub-quadratic sequence mixing (assignment): skipped for
+# pure full-attention archs, recorded as such (DESIGN.md §6).
+def runnable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return ARCHS[arch].sub_quadratic
+    return True
+
+
+def _build_gate_blocklist():
+    """2 MB Bloom blocklist (paper-default size) for the fused decode gate."""
+    import numpy as np
+    from ..runtime.serve_loop import blocklist_tables
+    from ..core.bloom import BloomFilter
+    rng = np.random.default_rng(0)
+    bf = BloomFilter(2 * 1024 * 1024 * 8, k=3)
+    bf.insert(rng.integers(0, 1 << 63, 100_000).astype(np.uint64))
+    return blocklist_tables(bf)
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             habf_gate: bool = False, rules=None, accum: int | None = None,
+             opt_kind: str | None = None) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "habf_gate": habf_gate}
+
+    if rules is None and shape.kind in ("decode", "prefill"):
+        rules = dict(sh.DECODE_RULES)  # split-KV: cache seq over `model`
+    with sh.use_mesh(mesh, rules):
+        pshapes, pspecs = model.abstract_init()
+        p_sh = param_shardings(mesh, pspecs, rules, shapes=pshapes)
+        if cfg.fsdp:
+            from ..runtime.train_loop import fsdp_shardings
+            p_sh = fsdp_shardings(mesh, p_sh, pshapes)
+            rec["fsdp"] = True
+        if shape.kind == "train":
+            kind = opt_kind or OPT_KIND.get((arch, shape_name), "adamw")
+            opt = make_optimizer(cfg, kind=kind)
+            rec["optimizer"] = kind
+            acc = accum or accum_for(arch, shape_name)
+            import jax.numpy as _jnp
+            adt = (_jnp.bfloat16 if cfg.opt_state_dtype == "bfloat16"
+                   else _jnp.float32)
+            step = make_train_step(model, opt, accum=acc, accum_dtype=adt)
+            rec["accum_dtype"] = str(_jnp.dtype(adt))
+            o_shapes = jax.eval_shape(opt.init, pshapes)
+            o_sh = opt_state_shardings(mesh, opt, pshapes, pspecs,
+                                       zero1=True, rules=rules, p_sh=p_sh)
+            ispecs = model.input_specs(shape)["batch"]
+            b_sh = batch_shardings(mesh, ispecs, rules)
+            rec["accum"] = acc
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh,
+                                            metrics_shardings(mesh)))
+            lowered = jitted.lower(pshapes, o_shapes, ispecs)
+            static_args = (pshapes, o_shapes, ispecs)
+            static_sh = (p_sh, o_sh, b_sh)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model)
+            specs = model.input_specs(shape)
+            c_sh = sh.tree_shardings(mesh, model.cache_specs(), rules,
+                                     shapes=specs["cache"])
+            b_sh = batch_shardings(mesh, specs["batch"], rules)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh))
+            lowered = jitted.lower(pshapes, specs["batch"], specs["cache"])
+            static_args = (pshapes, specs["batch"], specs["cache"])
+            static_sh = (p_sh, b_sh, c_sh)
+        else:  # decode
+            specs = model.input_specs(shape)
+            c_sh = sh.tree_shardings(mesh, model.cache_specs(), rules,
+                                     shapes=specs["cache"])
+            tok_sh = sh.spec_for(mesh, dict(sh.DEFAULT_RULES, **(rules or {})),
+                                 ("batch",), shape=specs["tokens"].shape)
+            pos_sh = sh.spec_for(mesh, sh.DEFAULT_RULES, ())
+            if habf_gate:
+                # fuse the paper's filters into the lowered decode step:
+                # n-gram blocklist probe + (replicated, VMEM-scale) tables
+                bl = _build_gate_blocklist()
+                step = make_decode_step(model, blocklist=bl, ngram_n=4)
+                B = specs["tokens"].shape[0]
+                win = jax.ShapeDtypeStruct((B, 4), jnp.int32)
+                win_sh = sh.spec_for(mesh, sh.DEFAULT_RULES, ("batch", None),
+                                     shape=win.shape)
+                jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh,
+                                                     pos_sh, win_sh))
+                lowered = jitted.lower(pshapes, specs["tokens"],
+                                       specs["cache"], specs["pos"], win)
+                static_args = (pshapes, specs["tokens"], specs["cache"],
+                               specs["pos"], win)
+                static_sh = (p_sh, tok_sh, c_sh, pos_sh, win_sh)
+            else:
+                step = make_decode_step(model)
+                jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh,
+                                                     pos_sh))
+                lowered = jitted.lower(pshapes, specs["tokens"],
+                                       specs["cache"], specs["pos"])
+                static_args = (pshapes, specs["tokens"], specs["cache"],
+                               specs["pos"])
+                static_sh = (p_sh, tok_sh, c_sh, pos_sh)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ma = compiled.memory_analysis()
+        print(f"  memory_analysis: {ma}", flush=True)   # proves it fits
+        if ma is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "peak_memory_in_bytes"):
+                v = getattr(ma, attr, None)
+                if v is not None:
+                    rec[attr] = int(v)
+        ca = compiled.cost_analysis()
+        print(f"  cost_analysis: flops={ca.get('flops')} "
+              f"bytes={ca.get('bytes accessed')}", flush=True)
+        if ca:
+            # NOTE: XLA counts while bodies once — kept for reference only;
+            # the roofline uses the trip-count-scaled analyzer below.
+            rec["xla_cost_flops"] = float(ca.get("flops", 0.0))
+            rec["xla_cost_bytes"] = float(ca.get("bytes accessed", 0.0))
+        hlo = compiled.as_text()
+        an = hlo_analysis.analyze(hlo)
+        rec["hlo_flops_per_device"] = an["flops"]
+        rec["hlo_bytes_per_device"] = an["hbm_bytes"]
+        rec["collectives"] = an["collectives"]
+        rec["_hlo_text"] = hlo  # popped + dumped compressed by the caller
+        # exact per-device argument residency from shardings
+        rec["args_bytes_per_device"] = sum(
+            _leaf_bytes_per_device(a, s) for a, s in zip(static_args, static_sh))
+        pc = cfg.param_counts()
+        rec["params_total"] = pc["total"]
+        rec["params_active"] = pc["active"]
+        rec["n_devices"] = mesh.devices.size
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def _leaf_bytes_per_device(tree, shardings) -> int:
+    leaves = jax.tree.leaves(tree)
+    shs = jax.tree.leaves(shardings,
+                          is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+    if len(shs) == 1 and len(leaves) > 1:
+        shs = shs * len(leaves)
+    total = 0
+    for l, s in zip(leaves, shs):
+        try:
+            shard_shape = s.shard_shape(tuple(l.shape))
+            total += int(np.prod(shard_shape)) * jnp.dtype(l.dtype).itemsize
+        except Exception:
+            total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--habf-gate", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                if runnable(a, s):
+                    cells.append((a, s))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    out_dir = Path(args.out)
+    ok = fail = 0
+    for multi_pod in meshes:
+        sub = out_dir / ("2x16x16" if multi_pod else "16x16")
+        sub.mkdir(parents=True, exist_ok=True)
+        for arch, shape in cells:
+            path = sub / f"{arch}__{shape}.json"
+            if args.skip_existing and path.exists():
+                ok += 1
+                continue
+            print(f"[dryrun] {arch} x {shape} mesh="
+                  f"{'2x16x16' if multi_pod else '16x16'}", flush=True)
+            try:
+                rec = run_cell(arch, shape, multi_pod=multi_pod,
+                               habf_gate=args.habf_gate)
+                hlo = rec.pop("_hlo_text", None)
+                if hlo is not None:
+                    import zstandard
+                    (sub / f"{arch}__{shape}.hlo.zst").write_bytes(
+                        zstandard.ZstdCompressor(level=9).compress(
+                            hlo.encode()))
+                path.write_text(json.dumps(rec, indent=1))
+                print(f"  ok: compile={rec['compile_s']}s "
+                      f"flops={rec.get('hlo_flops_per_device', 0):.3g} "
+                      f"coll={sum(d['bytes'] for d in rec['collectives'].values()):.3g}B",
+                      flush=True)
+                ok += 1
+            except Exception as e:
+                fail += 1
+                err = {"arch": arch, "shape": shape, "error": str(e),
+                       "traceback": traceback.format_exc()[-3000:]}
+                (sub / f"{arch}__{shape}.FAILED.json").write_text(
+                    json.dumps(err, indent=1))
+                print(f"  FAILED: {e}", flush=True)
+    print(f"[dryrun] done: {ok} ok, {fail} failed", flush=True)
+    return 0 if fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,257 @@
+"""Post-SPMD HLO analysis for the roofline (§Roofline in EXPERIMENTS.md).
+
+XLA's HloCostAnalysis counts while-loop bodies ONCE, so a scanned-layers
+model under-reports FLOPs by ~n_layers.  This module parses the compiled
+HLO text and:
+
+  * extracts exact trip counts from `backend_config={"known_trip_count"..}`
+    on while ops,
+  * propagates execution multipliers through the computation call graph
+    (while body x trip, conditional branches, fusion bodies),
+  * sums dot FLOPs (2 * prod(out) * prod(contracting dims)) per-device,
+  * sums an HBM-traffic proxy (operand + output bytes of every
+    non-fused-context op — fusion internals don't touch HBM),
+  * sums collective bytes by kind (output-size proxy for link traffic).
+
+All numbers are PER DEVICE (the HLO is the per-partition module).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "s4": 1, "u4": 1, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|"
+    r"pred|c64|c128|token)\[([0-9,]*)\]")
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
+                    r"([a-z][a-z0-9\-]*)\(")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes_in(type_str: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        d = [int(x) for x in dims.split(",") if x]
+        out.append((dt, d))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    type_str: str
+    rest: str           # text after the op name (operands + attrs)
+    out_bytes: int = 0
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # %name -> shapes list
+    producers: dict = field(default_factory=dict)  # %name -> op kind
+
+
+def parse_module(hlo: str):
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        s = raw.rstrip()
+        st = s.strip()
+        if st.startswith("ENTRY"):
+            name = st.split("(")[0].replace("ENTRY", "").strip().lstrip("%")
+            cur = comps.setdefault(name, Computation(name))
+            entry = name
+            continue
+        if st.endswith("{") and "(" in st and "=" not in st.split("(")[0]:
+            name = st.split("(")[0].strip().lstrip("%").split()[-1]
+            cur = comps.setdefault(name, Computation(name))
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        name, type_str, kind = m.group(1), m.group(2), m.group(3)
+        shapes = _shapes_in(type_str)
+        cur.symbols[name] = shapes
+        rest = s[m.end():]
+        cur.producers[name] = kind
+        cur.ops.append(Op(name=name, kind=kind, type_str=type_str, rest=rest,
+                          out_bytes=_nbytes(shapes)))
+    return comps, entry
+
+
+def _trip_count(rest: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+    return int(m.group(1)) if m else 1
+
+
+def _called(rest: str, keys=("body", "condition", "to_apply", "calls")):
+    out = []
+    for key in keys:
+        for m in re.finditer(rf"{key}=%?([\w\.\-]+)", rest):
+            out.append((key, m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", rest)
+    if m:
+        for b in m.group(1).split(","):
+            out.append(("branch", b.strip().lstrip("%")))
+    return out
+
+
+def _multipliers(comps, entry):
+    """(mult, fused_context) per computation, propagated from entry."""
+    mult: dict[str, float] = {entry: 1.0}
+    fused: dict[str, bool] = {entry: False}
+    # topological-ish propagation: iterate until fixpoint (call DAG, small)
+    for _ in range(64):
+        changed = False
+        for cname, comp in comps.items():
+            m0 = mult.get(cname)
+            if m0 is None:
+                continue
+            f0 = fused.get(cname, False)
+            for op in comp.ops:
+                if op.kind == "while":
+                    t = _trip_count(op.rest)
+                    for key, callee in _called(op.rest, ("body", "condition")):
+                        add = m0 * (t if key == "body" else t + 1)
+                        if mult.get(callee, 0) < add:
+                            mult[callee] = add
+                            fused[callee] = f0
+                            changed = True
+                elif op.kind in ("fusion",):
+                    for _, callee in _called(op.rest, ("calls",)):
+                        if mult.get(callee, 0) < m0:
+                            mult[callee] = m0
+                            fused[callee] = True
+                            changed = True
+                elif op.kind in ("conditional", "call", "custom-call",
+                                 "async-start"):
+                    for _, callee in _called(op.rest,
+                                             ("branch", "to_apply", "calls")):
+                        if mult.get(callee, 0) < m0:
+                            mult[callee] = m0
+                            fused[callee] = f0
+                            changed = True
+                # reduce/map/sort to_apply bodies: scalar — ignored
+        if not changed:
+            break
+    return mult, fused
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out_elems = 1
+    for dt, dims in _shapes_in(op.type_str):
+        for d in dims:
+            out_elems *= d
+    ops_m = re.findall(r"%([\w\.\-]+)", op.rest.split(")", 1)[0])
+    lhs = comp.symbols.get(ops_m[0]) if ops_m else None
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    contract = 1
+    if lhs and m:
+        dims = lhs[0][1]
+        for i in m.group(1).split(","):
+            if i:
+                contract *= dims[int(i)]
+    return 2.0 * out_elems * contract
+
+
+def _operand_bytes(comp: Computation, op: Op) -> int:
+    args = op.rest.split(")", 1)[0]
+    total = 0
+    for name in re.findall(r"%([\w\.\-]+)", args):
+        shapes = comp.symbols.get(name)
+        if shapes:
+            total += _nbytes(shapes)
+    return total
+
+
+def _operand_n_bytes(comp: Computation, op: Op, n: int) -> int:
+    """Bytes of the n-th operand (0-based); 0 if unresolvable."""
+    args = op.rest.split(")", 1)[0]
+    names = re.findall(r"%([\w\.\-]+)", args)
+    if n < len(names):
+        shapes = comp.symbols.get(names[n])
+        if shapes:
+            return _nbytes(shapes)
+    return 0
+
+
+# HBM-traffic proxy: the CPU backend fuses almost nothing, so counting
+# every op's operands+outputs massively overestimates what a TPU (which
+# fuses elementwise chains into its matmul/reduce consumers) would move.
+# We count only ops that are real HBM data movement on TPU; elementwise /
+# broadcast / convert / compare / select chains are treated as fused.
+# "copy" excluded: XLA:CPU layout assignment emits several copies of the
+# same tensor between einsum forms; TPU fuses transposes into consumers.
+_BYTES_OPS = {"dot", "convolution", "gather", "scatter", "dynamic-slice",
+              "dynamic-update-slice", "reduce", "reduce-window", "sort",
+              "concatenate", "cholesky", "triangular-solve", "fft", "rng"}
+
+
+def analyze(hlo: str) -> dict:
+    comps, entry = parse_module(hlo)
+    mult, fused = _multipliers(comps, entry)
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll: dict[str, dict] = {}
+    for cname, comp in comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue
+        for op in comp.ops:
+            if op.kind == "dot":
+                flops += m * _dot_flops(comp, op)
+            kind = next((c for c in COLLECTIVES
+                         if op.kind == c or op.kind.startswith(c + "-")), None)
+            if kind and "done" not in op.kind:
+                d = coll.setdefault(kind, {"count": 0, "bytes": 0.0})
+                d["count"] += int(m)
+                b = op.out_bytes
+                # XLA:CPU promotes bf16 all-reduces to f32 (no native bf16
+                # summation on CPU), and hoists bf16->f32 converts ahead of
+                # gathers; TPU keeps bf16 on the wire.  Count such
+                # collectives at their pre-promotion width.
+                if "promoted" in op.rest:
+                    b //= 2
+                else:
+                    args = re.findall(r"%([\w\.\-]+)",
+                                      op.rest.split(")", 1)[0])
+                    if args and (comp.producers.get(args[0]) == "convert"
+                                 or "convert" in args[0]):
+                        b //= 2
+                d["bytes"] += m * b
+            if op.kind == "dynamic-slice":
+                # in-place slice read: moved bytes = 2 x slice, not operand
+                hbm_bytes += m * 2 * op.out_bytes
+            elif op.kind == "dynamic-update-slice":
+                # in-place update: only the update slice is read + written
+                hbm_bytes += m * 2 * _operand_n_bytes(comp, op, 1)
+            elif op.kind in _BYTES_OPS:
+                hbm_bytes += m * (op.out_bytes + _operand_bytes(comp, op))
+            elif kind:
+                hbm_bytes += m * 2 * op.out_bytes
+    return {"flops": flops, "hbm_bytes": hbm_bytes, "collectives": coll,
+            "n_computations": len(comps)}

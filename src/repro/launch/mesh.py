@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (v5e pod); multi_pod stacks 2 pods = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(n: int | None = None):
+    """Small mesh over however many (host) devices exist — for tests."""
+    n = n or len(jax.devices())
+    d = max(1, n // 2)
+    m = n // d
+    return jax.make_mesh((d, m), ("data", "model"))

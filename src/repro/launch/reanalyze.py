@@ -1,0 +1,49 @@
+"""Recompute hlo_flops/bytes/collectives for existing dry-run records from
+their compressed HLO dumps (analyzer iterations don't need recompiles).
+
+  PYTHONPATH=src python -m repro.launch.reanalyze [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import zstandard
+
+from . import hlo_analysis
+
+
+def reanalyze_dir(d: Path) -> int:
+    n = 0
+    for j in sorted(d.glob("*.json")):
+        if "FAILED" in j.name:
+            continue
+        z = j.with_suffix("").with_suffix("")  # strip .json
+        z = d / (j.name[: -len(".json")] + ".hlo.zst")
+        if not z.exists():
+            continue
+        hlo = zstandard.ZstdDecompressor().decompress(z.read_bytes()).decode()
+        an = hlo_analysis.analyze(hlo)
+        rec = json.loads(j.read_text())
+        rec["hlo_flops_per_device"] = an["flops"]
+        rec["hlo_bytes_per_device"] = an["hbm_bytes"]
+        rec["collectives"] = an["collectives"]
+        j.write_text(json.dumps(rec, indent=1))
+        n += 1
+    return n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    total = 0
+    for sub in Path(args.dir).iterdir():
+        if sub.is_dir():
+            total += reanalyze_dir(sub)
+    print(f"reanalyzed {total} records")
+
+
+if __name__ == "__main__":
+    main()

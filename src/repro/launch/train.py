@@ -1,0 +1,140 @@
+"""End-to-end training driver (CPU-runnable on reduced configs; the same
+code path the dry-run lowers at production scale).
+
+Wires together every substrate: config registry -> model zoo -> data
+pipeline (HABF dedup) -> AdamW (+accum) -> checkpointing -> fault-tolerant
+supervisor -> logical-axis sharding on whatever mesh exists.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models.model import Model
+from ..optimizer.adamw import AdamW, warmup_cosine
+from ..checkpoint.checkpointer import Checkpointer
+from ..data.pipeline import DataPipeline, PipelineConfig, build_dedup_filter
+from ..runtime import sharding as sh
+from ..runtime.train_loop import make_train_step
+from ..runtime.fault_tolerance import TrainSupervisor
+from .mesh import make_host_mesh
+
+
+def run(arch: str, reduced: bool = True, steps: int = 100, batch: int = 8,
+        seq: int = 128, lr: float = 3e-3, accum: int = 1,
+        ckpt_dir: str | None = None, resume: bool = False,
+        save_every: int = 50, dedup: bool = True, seed: int = 0,
+        log_every: int = 10, use_mesh: bool = True) -> dict:
+    cfg = get_config(arch, reduced=reduced)
+    model = Model(cfg)
+    opt = AdamW(lr=warmup_cosine(lr, warmup=max(1, steps // 10), total=steps),
+                weight_decay=0.1)
+
+    dedup_filter = None
+    if dedup:
+        rng = np.random.default_rng(seed)
+        dups = rng.integers(0, 1 << 40, 2000).astype(np.uint64)
+        clean = rng.integers(1 << 41, 1 << 42, 4000).astype(np.uint64)
+        dedup_filter = build_dedup_filter(dups, clean, total_bytes=1 << 16)
+
+    pipe = DataPipeline(PipelineConfig(vocab=cfg.vocab, seq_len=seq,
+                                       global_batch=batch, seed=seed),
+                        dedup=dedup_filter)
+
+    params, specs = model.init(jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    train_step = make_train_step(model, opt, accum=accum)
+
+    mesh_ctx = None
+    if use_mesh and len(jax.devices()) > 1:
+        mesh = make_host_mesh()
+        mesh_ctx = sh.use_mesh(mesh)
+        mesh_ctx.__enter__()
+    step_jit = jax.jit(train_step)
+
+    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    start = 0
+    if ckpt and resume and ckpt.latest_step() is not None:
+        (params, opt_state), man = ckpt.restore((params, opt_state))
+        start = man["step"]
+        pipe.step = man["aux"].get("data_step", start)
+
+    losses = []
+    t0 = time.time()
+
+    def one_step(state, step):
+        params, opt_state = state
+        b = pipe.batch_at(pipe.step)
+        pipe.step += 1
+        params, opt_state, metrics = step_jit(
+            params, opt_state, {"tokens": jnp.asarray(b["tokens"]),
+                                "labels": jnp.asarray(b["labels"])})
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+        return params, opt_state
+
+    if ckpt:
+        sup = TrainSupervisor(ckpt, save_every=save_every)
+
+        def restore_fn(_):
+            st, man = ckpt.restore((params, opt_state))
+            pipe.step = man["aux"].get("data_step", man["step"])
+            return st, man["step"]
+
+        state = sup.run(state=(params, opt_state), step_fn=one_step,
+                        n_steps=steps, restore_fn=restore_fn,
+                        save_aux_fn=lambda s: {"data_step": pipe.step},
+                        start_step=start)
+        params, opt_state = state
+        report = sup.report
+    else:
+        state = (params, opt_state)
+        for s in range(start, steps):
+            state = one_step(state, s)
+        params, opt_state = state
+        report = None
+
+    if mesh_ctx is not None:
+        mesh_ctx.__exit__(None, None, None)
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "skipped_docs": pipe.skipped,
+            "report": report.__dict__ if report else None,
+            "params": params}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--no-dedup", dest="dedup", action="store_false")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = run(arch=args.arch, reduced=args.reduced, steps=args.steps,
+              batch=args.batch, seq=args.seq, lr=args.lr, accum=args.accum,
+              ckpt_dir=args.ckpt_dir, resume=args.resume, dedup=args.dedup,
+              seed=args.seed)
+    print(f"final loss {out['final_loss']:.4f}; "
+          f"dedup skipped {out['skipped_docs']} docs")
+
+
+if __name__ == "__main__":
+    main()

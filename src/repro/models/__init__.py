@@ -1,0 +1,6 @@
+"""Model zoo: pure-JAX implementations of the assigned architectures."""
+from .model import Model
+from . import layers, transformer, moe, mla, ssm, hybrid, encdec, vlm
+
+__all__ = ["Model", "layers", "transformer", "moe", "mla", "ssm", "hybrid",
+           "encdec", "vlm"]

@@ -1,0 +1,170 @@
+"""Whisper-style encoder-decoder backbone.
+
+Frontend stub (per assignment): `input_specs()` provides precomputed frame
+embeddings (B, enc_frames, D) — i.e. the output of Whisper's conv stem —
+so the encoder here is sinusoid + transformer layers.  The decoder is a
+standard causal stack with cross-attention over cached encoder memory
+(projected K/V cached at prefill, Whisper's production serving layout).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as ly
+
+
+def _sinusoid(length: int, dim: int):
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / dim)
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1),
+                       jnp.float32)
+
+
+def init_params(cfg: ModelConfig, rng):
+    b = ly.ParamBuilder(rng, cfg.pdtype)
+    ly.init_embed(b, cfg)
+    b.make("dec_pos", (32_768, cfg.d_model), (None, "d_model"), init="embed")
+    enc = b.sub("enc")
+    enc.make("ln_attn", (cfg.enc_layers, cfg.d_model), ("layers", "d_model"),
+             init="ones")
+    enc.make("ln_mlp", (cfg.enc_layers, cfg.d_model), ("layers", "d_model"),
+             init="ones")
+    ly.init_attention(enc, cfg, cfg.enc_layers)
+    ly.init_mlp(enc, cfg, cfg.enc_layers, gated=False)
+    enc.make("final_norm", (cfg.d_model,), ("d_model",), init="ones")
+    dec = b.sub("dec")
+    dec.make("ln_self", (cfg.n_layers, cfg.d_model), ("layers", "d_model"),
+             init="ones")
+    dec.make("ln_x", (cfg.n_layers, cfg.d_model), ("layers", "d_model"),
+             init="ones")
+    dec.make("ln_mlp", (cfg.n_layers, cfg.d_model), ("layers", "d_model"),
+             init="ones")
+    ly.init_attention(dec, cfg, cfg.n_layers, prefix="self_attn")
+    ly.init_cross_attention(dec, cfg, cfg.n_layers)
+    ly.init_mlp(dec, cfg, cfg.n_layers, gated=False)
+    return b.params, b.specs
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, S_enc, D) stubbed conv-stem output."""
+    x = frames.astype(cfg.cdtype) + _sinusoid(frames.shape[1],
+                                              cfg.d_model).astype(cfg.cdtype)
+    positions = jnp.arange(frames.shape[1])
+    ep = params["enc"]
+
+    def step(h, layer_p):
+        hn = ly.rmsnorm(h, layer_p["ln_attn"], cfg.norm_eps)
+        att, _ = ly.attention(cfg, layer_p["attn"], hn, positions,
+                              causal=False)
+        h = h + att
+        hn = ly.rmsnorm(h, layer_p["ln_mlp"], cfg.norm_eps)
+        return h + ly.mlp(cfg, layer_p["mlp"], hn, gated=False), None
+
+    stack = {k: ep[k] for k in ("ln_attn", "ln_mlp", "attn", "mlp")}
+    x, _ = jax.lax.scan(lambda h, p: step(h, p), x, stack)
+    return ly.rmsnorm(x, ep["final_norm"], cfg.norm_eps)
+
+
+def project_memory_all(cfg: ModelConfig, params, enc_out):
+    """Per-decoder-layer cross-attn K/V: (L, B, S_enc, K, Dh) pair."""
+    dp = params["dec"]["xattn"]
+
+    def proj(layer_p):
+        return ly.project_memory(cfg, layer_p, enc_out)
+
+    mk, mv = jax.vmap(proj)(dp)
+    return mk, mv
+
+
+def _decoder(cfg: ModelConfig, params, x, positions, mem_k, mem_v,
+             cache=None, cache_pos=None):
+    dp = params["dec"]
+    policy = ly.remat_policy(cfg.remat)
+
+    def step(h, xs):
+        layer_p, mk, mv, layer_c = xs
+        hn = ly.rmsnorm(h, layer_p["ln_self"], cfg.norm_eps)
+        att, nc = ly.attention(cfg, layer_p["self_attn"], hn, positions,
+                               cache=layer_c, cache_pos=cache_pos)
+        h = h + att
+        hn = ly.rmsnorm(h, layer_p["ln_x"], cfg.norm_eps)
+        h = h + ly.cross_attention(cfg, layer_p["xattn"], hn, mk, mv)
+        hn = ly.rmsnorm(h, layer_p["ln_mlp"], cfg.norm_eps)
+        return h + ly.mlp(cfg, layer_p["mlp"], hn, gated=False), \
+            (nc if nc is not None else {})
+
+    step_fn = (jax.checkpoint(step, policy=policy, prevent_cse=False)
+               if policy is not None and cache is None else step)
+    stack = {k: dp[k] for k in ("ln_self", "ln_x", "ln_mlp", "self_attn",
+                                "xattn", "mlp")}
+    x, new_c = jax.lax.scan(step_fn, x, (stack, mem_k, mem_v, cache))
+    return x, new_c
+
+
+def _embed_dec(cfg, params, tokens, pos0):
+    x = ly.embed_tokens(cfg, params, tokens)
+    T = tokens.shape[1]
+    pe = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos0, T, axis=0)
+    return x + pe.astype(cfg.cdtype)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    frames, tokens, labels = batch["frames"], batch["tokens"], batch["labels"]
+    enc = encode(cfg, params, frames)
+    mk, mv = project_memory_all(cfg, params, enc)
+    x = _embed_dec(cfg, params, tokens, 0)
+    positions = jnp.arange(tokens.shape[1])
+    x, _ = _decoder(cfg, params, x, positions, mk, mv)
+    logits = ly.logits_from_hidden(cfg, params, x)
+    return ly.cross_entropy(logits, labels)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    a = cfg.attn
+    L = cfg.n_layers
+    return {
+        "self": {"k": jnp.zeros((L, batch, seq_len, a.n_kv, a.head_dim), dtype),
+                 "v": jnp.zeros((L, batch, seq_len, a.n_kv, a.head_dim), dtype)},
+        "mem": {"k": jnp.zeros((L, batch, cfg.enc_frames, a.n_kv, a.head_dim),
+                               dtype),
+                "v": jnp.zeros((L, batch, cfg.enc_frames, a.n_kv, a.head_dim),
+                               dtype)},
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    mem = ("layers", "batch", "frames", "kv_heads", "head_dim")
+    return {"self": {"k": kv, "v": kv}, "mem": {"k": mem, "v": mem}}
+
+
+def prefill(cfg: ModelConfig, params, batch, cache):
+    """batch: dict(frames, tokens).  Encodes audio + prompt tokens."""
+    enc = encode(cfg, params, batch["frames"])
+    mk, mv = project_memory_all(cfg, params, enc)
+    tokens = batch["tokens"]
+    x = _embed_dec(cfg, params, tokens, 0)
+    positions = jnp.arange(tokens.shape[1])
+    x, new_self = _decoder(cfg, params, x, positions, mk, mv,
+                           cache=cache["self"], cache_pos=0)
+    logits = ly.logits_from_hidden(cfg, params, x[:, -1:, :])
+    new_cache = {"self": new_self,
+                 "mem": {"k": mk.astype(cache["mem"]["k"].dtype),
+                         "v": mv.astype(cache["mem"]["v"].dtype)}}
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos):
+    x = _embed_dec(cfg, params, tokens[:, None], pos)
+    positions = pos[None] if hasattr(pos, "ndim") else jnp.asarray([pos])
+    mk = cache["mem"]["k"].astype(cfg.cdtype)
+    mv = cache["mem"]["v"].astype(cfg.cdtype)
+    x, new_self = _decoder(cfg, params, x, positions, mk, mv,
+                           cache=cache["self"], cache_pos=pos)
+    logits = ly.logits_from_hidden(cfg, params, x)
+    return logits[:, 0], {"self": new_self, "mem": cache["mem"]}

@@ -1,0 +1,153 @@
+"""Zamba-2-style hybrid: Mamba-2 backbone + a *shared* attention block
+(one set of weights, applied every `shared_attn_period` layers, each
+application with its own KV cache — weights shared, state not).
+
+Deviation note (DESIGN.md §8): real Zamba-2 concatenates the original
+embedding into the shared block input and adds per-application LoRA
+deltas; we apply a standard pre-norm shared block (same weights each
+time), which preserves the defining weight-sharing/memory character.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as ly
+from .ssm import init_mamba, mamba_block
+
+
+def n_shared_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_period
+
+
+def init_params(cfg: ModelConfig, rng):
+    b = ly.ParamBuilder(rng, cfg.pdtype)
+    ly.init_embed(b, cfg)
+    mb = b.sub("mamba")
+    mb.make("ln", (cfg.n_layers, cfg.d_model), ("layers", "d_model"),
+            init="ones")
+    init_mamba(mb, cfg, cfg.n_layers)
+    sb = b.sub("shared")
+    sb.make("ln_attn", (1, cfg.d_model), ("layers", "d_model"), init="ones")
+    sb.make("ln_mlp", (1, cfg.d_model), ("layers", "d_model"), init="ones")
+    ly.init_attention(sb, cfg, 1)
+    ly.init_mlp(sb, cfg, 1)
+    return b.params, b.specs
+
+
+def _shared_block(cfg, sp, x, positions, cache, cache_pos):
+    p = jax.tree.map(lambda a: a[0], sp)       # drop the L=1 stack axis
+    h = ly.rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    att, new_cache = ly.attention(cfg, p["attn"], h, positions, cache=cache,
+                                  cache_pos=cache_pos)
+    x = x + att
+    h = ly.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    return x + ly.mlp(cfg, p["mlp"], h), new_cache
+
+
+def backbone(cfg: ModelConfig, params, x, positions, caches=None,
+             cache_pos=None):
+    """caches: {"ssm": stacked (L,...) conv/state, "attn": stacked
+    (n_apps,...) k/v} or None."""
+    period = cfg.shared_attn_period
+    apps = n_shared_apps(cfg)
+    policy = ly.remat_policy(cfg.remat)
+    mp = params["mamba"]
+    new_ssm, new_attn = ([] if caches is not None else None,
+                         [] if caches is not None else None)
+
+    def mamba_step(h, xs):
+        layer_p, layer_c = xs
+        hn = ly.rmsnorm(h, layer_p["ln"], cfg.norm_eps)
+        out, nc = mamba_block(cfg, layer_p["ssm"], hn, cache=layer_c)
+        return h + out, (nc if nc is not None else {})
+
+    step_fn = (jax.checkpoint(mamba_step, policy=policy, prevent_cse=False)
+               if policy is not None and caches is None else mamba_step)
+
+    for a in range(apps):
+        lo = a * period
+        seg_p = jax.tree.map(lambda t: t[lo: lo + period], mp)
+        seg_c = (jax.tree.map(lambda t: t[lo: lo + period], caches["ssm"])
+                 if caches is not None else None)
+        x, seg_new = jax.lax.scan(step_fn, x, (seg_p, seg_c))
+        ac = (jax.tree.map(lambda t: t[a], caches["attn"])
+              if caches is not None else None)
+        x, nc = _shared_block(cfg, params["shared"], x, positions, ac,
+                              cache_pos)
+        if caches is not None:
+            new_ssm.append(seg_new)
+            new_attn.append(nc)
+    # trailing mamba layers (n_layers not divisible by period)
+    lo = apps * period
+    if lo < cfg.n_layers:
+        seg_p = jax.tree.map(lambda t: t[lo:], mp)
+        seg_c = (jax.tree.map(lambda t: t[lo:], caches["ssm"])
+                 if caches is not None else None)
+        x, seg_new = jax.lax.scan(step_fn, x, (seg_p, seg_c))
+        if caches is not None:
+            new_ssm.append(seg_new)
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_ssm),
+            "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *new_attn),
+        }
+    return x, new_caches, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    from .ssm import _dims
+    dtype = dtype or cfg.cdtype
+    s = cfg.ssm
+    d_in, nh, d_conv = _dims(cfg)
+    a = cfg.attn
+    apps = n_shared_apps(cfg)
+    return {
+        "ssm": {
+            "conv": jnp.zeros((cfg.n_layers, batch, s.conv - 1, d_conv), dtype),
+            "state": jnp.zeros((cfg.n_layers, batch, nh, s.headdim, s.state),
+                               jnp.float32),
+        },
+        "attn": {
+            "k": jnp.zeros((apps, batch, seq_len, a.n_kv, a.head_dim), dtype),
+            "v": jnp.zeros((apps, batch, seq_len, a.n_kv, a.head_dim), dtype),
+        },
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    return {
+        "ssm": {"conv": ("layers", "batch", "conv", "ssm_heads"),
+                "state": ("layers", "batch", "ssm_heads", None, "ssm_state")},
+        "attn": {"k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                 "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim")},
+    }
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = ly.embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    x, _, aux = backbone(cfg, params, x, positions)
+    logits = ly.logits_from_hidden(cfg, params, x)
+    return ly.cross_entropy(logits, labels) + aux
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache):
+    x = ly.embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    x, new_caches, _ = backbone(cfg, params, x, positions, caches=cache,
+                                cache_pos=0)
+    logits = ly.logits_from_hidden(cfg, params, x[:, -1:, :])
+    return logits[:, 0], new_caches
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos):
+    x = ly.embed_tokens(cfg, params, tokens[:, None])
+    positions = pos[None] if hasattr(pos, "ndim") else jnp.asarray([pos])
+    x, new_caches, _ = backbone(cfg, params, x, positions, caches=cache,
+                                cache_pos=pos)
+    logits = ly.logits_from_hidden(cfg, params, x)
+    return logits[:, 0], new_caches

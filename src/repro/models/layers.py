@@ -1,0 +1,309 @@
+"""Common model layers (pure JAX, no flax).
+
+Params are nested dicts built through `ParamBuilder`, which records a
+parallel tree of logical-axis tuples consumed by runtime/sharding for
+NamedSharding placement (and by the dry-run for in_shardings).
+
+Conventions:
+  * params stored in cfg.param_dtype, compute in cfg.compute_dtype,
+    softmax/logits/loss in fp32;
+  * attention uses grouped-query form (B, T, K, G, Dh);
+  * KV caches are (B, S, K, Dh) per layer, stacked (L, ...) for scan;
+  * activations are annotated with logical axes via sharding.shard().
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import AttnConfig, ModelConfig
+from ..runtime.sharding import shard
+
+
+class ParamBuilder:
+    """Builds (params, specs) trees in lockstep so they can't drift."""
+
+    def __init__(self, key: jax.Array, dtype):
+        self.key = key
+        self.dtype = dtype
+        self.params: dict[str, Any] = {}
+        self.specs: dict[str, Any] = {}
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def make(self, name: str, shape, axes, init: str = "fan_in",
+             scale: float | None = None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        if init == "zeros":
+            p = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            p = jnp.ones(shape, self.dtype)
+        else:
+            if scale is None:
+                if init == "embed":
+                    scale = 0.02
+                else:  # fan_in over all but the last axis
+                    fan_in = math.prod(shape[:-1]) if len(shape) > 1 else shape[0]
+                    scale = 1.0 / math.sqrt(max(1, fan_in))
+            p = (jax.random.normal(self._next(), shape, jnp.float32)
+                 * scale).astype(self.dtype)
+        self.params[name] = p
+        self.specs[name] = tuple(axes)
+        return p
+
+    def sub(self, name: str) -> "ParamBuilder":
+        child = ParamBuilder.__new__(ParamBuilder)
+        child.key = self._next()
+        child.dtype = self.dtype
+        child.params = self.params.setdefault(name, {})
+        child.specs = self.specs.setdefault(name, {})
+        return child
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., T, n, Dh); positions: (T,) or (B, T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    if cos.ndim < x.ndim:  # broadcast batch dims
+        cos = jnp.expand_dims(cos, 0)
+        sin = jnp.expand_dims(sin, 0)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_fp32(scores, mask=None):
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional qk-norm / qkv-bias, KV cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(b: ParamBuilder, cfg: ModelConfig, L: int,
+                   prefix: str = "attn"):
+    a = cfg.attn
+    D, H, K, Dh = cfg.d_model, a.n_heads, a.n_kv, a.head_dim
+    s = b.sub(prefix)
+    s.make("wq", (L, D, H * Dh), ("layers", "d_model", "heads"))
+    s.make("wk", (L, D, K * Dh), ("layers", "d_model", "kv_heads"))
+    s.make("wv", (L, D, K * Dh), ("layers", "d_model", "kv_heads"))
+    s.make("wo", (L, H * Dh, D), ("layers", "heads", "d_model"))
+    if a.qkv_bias:
+        s.make("bq", (L, H * Dh), ("layers", "heads"), init="zeros")
+        s.make("bk", (L, K * Dh), ("layers", "kv_heads"), init="zeros")
+        s.make("bv", (L, K * Dh), ("layers", "kv_heads"), init="zeros")
+    if a.qk_norm:
+        s.make("q_norm", (L, Dh), ("layers", "head_dim"), init="ones")
+        s.make("k_norm", (L, Dh), ("layers", "head_dim"), init="ones")
+
+
+def attention(cfg: ModelConfig, p, x, positions, *, cache=None,
+              cache_pos=None, causal=True, a: AttnConfig | None = None):
+    """p: this layer's attn params (no leading L).  cache: dict(k, v) of
+    (B, S, K, Dh) or None.  cache_pos: scalar write offset into the cache.
+    Returns (out, new_cache)."""
+    a = a or cfg.attn
+    H, K, Dh = a.n_heads, a.n_kv, a.head_dim
+    G = H // K
+    B, T, D = x.shape
+    cd = cfg.cdtype
+
+    q = jnp.einsum("btd,dh->bth", x, p["wq"].astype(cd))
+    k = jnp.einsum("btd,dh->bth", x, p["wk"].astype(cd))
+    v = jnp.einsum("btd,dh->bth", x, p["wv"].astype(cd))
+    if a.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    from ..runtime.sharding import heads_divisible
+    q = shard(q, "batch", "seq", "heads" if heads_divisible("heads", H)
+              else None)
+    kv_ax = "kv_heads" if heads_divisible("kv_heads", K) else None
+    k = shard(k, "batch", "seq", kv_ax)
+    v = shard(v, "batch", "seq", kv_ax)
+    q = q.reshape(B, T, H, Dh)
+    k = k.reshape(B, T, K, Dh)
+    v = v.reshape(B, T, K, Dh)
+    if a.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, a.rope_theta)
+    k = rope(k, positions, a.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(cd), cv.astype(cd)
+    # split-KV: under decode/prefill rules kv_seq maps to `model`, sharding
+    # the S axis of attention (scores stay local; av partial-sums reduce)
+    k = shard(k, "batch", "kv_seq", kv_ax, None)
+    v = shard(v, "batch", "kv_seq", kv_ax, None)
+
+    S = k.shape[1]
+    qg = q.reshape(B, T, K, G, Dh)
+    q_pos = positions if positions.ndim else positions[None]
+    kv_pos = jnp.arange(S)
+
+    def attend(qc, qp):
+        """One query block against the full K/V.  Softmax over the whole S
+        axis is computed inside the block, so chunking is exact (the
+        flash-attention tiling insight, without needing the online pass
+        because S stays resident)."""
+        scores = jnp.einsum("btkgd,bskd->bkgts", qc, k) / math.sqrt(Dh)
+        if causal:
+            mask = qp[..., :, None] >= kv_pos[None, :]
+            while mask.ndim < scores.ndim:
+                mask = jnp.expand_dims(mask, -3 if mask.ndim >= 2 else 0)
+        else:
+            mask = None
+        w = softmax_fp32(scores, mask).astype(cd)
+        return jnp.einsum("bkgts,bskd->btkgd", w, v)
+
+    qc_len = cfg.q_chunk
+    if T > qc_len and T % qc_len == 0 and q_pos.ndim == 1:
+        nc = T // qc_len
+        qs = jnp.moveaxis(qg.reshape(B, nc, qc_len, K, G, Dh), 1, 0)
+        ps = q_pos.reshape(nc, qc_len)
+        _, outs = jax.lax.scan(
+            lambda _, xs: (None, attend(xs[0], xs[1])), None, (qs, ps))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, T, H * Dh)
+    else:
+        out = attend(qg, q_pos).reshape(B, T, H * Dh)
+    out = shard(out, "batch", "seq", "heads")
+    out = jnp.einsum("bth,hd->btd", out, p["wo"].astype(cd),
+                     preferred_element_type=cd)  # bf16 wire: cross-shard
+    return shard(out, "batch", "seq", "d_model"), new_cache  # partial sums reduce in bf16
+
+
+def init_cross_attention(b: ParamBuilder, cfg: ModelConfig, L: int,
+                         prefix: str = "xattn"):
+    init_attention(b, cfg, L, prefix=prefix)
+
+
+def cross_attention(cfg: ModelConfig, p, x, mem_k, mem_v):
+    """Whisper-style cross attention over precomputed encoder memory.
+    mem_k/mem_v: (B, S_enc, K, Dh) (already projected + cached)."""
+    a = cfg.attn
+    H, K, Dh = a.n_heads, a.n_kv, a.head_dim
+    G = H // K
+    B, T, D = x.shape
+    cd = cfg.cdtype
+    q = jnp.einsum("btd,dh->bth", x, p["wq"].astype(cd)).reshape(B, T, H, Dh)
+    qg = q.reshape(B, T, K, G, Dh)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, mem_k.astype(cd)) / math.sqrt(Dh)
+    w = softmax_fp32(scores).astype(cd)
+    out = jnp.einsum("bkgts,bskd->btkgd", w, mem_v.astype(cd))
+    out = out.reshape(B, T, H * Dh)
+    return jnp.einsum("bth,hd->btd", out, p["wo"].astype(cd))
+
+
+def project_memory(cfg: ModelConfig, p, enc_out):
+    """Precompute cross-attn K/V from encoder output (prefill-time)."""
+    a = cfg.attn
+    K, Dh = a.n_kv, a.head_dim
+    B, S, D = enc_out.shape
+    cd = cfg.cdtype
+    mk = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"].astype(cd)).reshape(B, S, K, Dh)
+    mv = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"].astype(cd)).reshape(B, S, K, Dh)
+    return mk, mv
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(b: ParamBuilder, cfg: ModelConfig, L: int, d_ff: int | None = None,
+             prefix: str = "mlp", gated: bool = True):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    s = b.sub(prefix)
+    if gated:
+        s.make("wi_g", (L, D, F), ("layers", "d_model", "ffn"))
+    s.make("wi", (L, D, F), ("layers", "d_model", "ffn"))
+    s.make("wo", (L, F, D), ("layers", "ffn", "d_model"))
+
+
+def mlp(cfg: ModelConfig, p, x, gated: bool = True):
+    cd = cfg.cdtype
+    h = jnp.einsum("btd,df->btf", x, p["wi"].astype(cd))
+    if gated:
+        g = jnp.einsum("btd,df->btf", x, p["wi_g"].astype(cd))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", "seq", "ffn")
+    out = jnp.einsum("btf,fd->btd", h, p["wo"].astype(cd),
+                     preferred_element_type=cd)
+    return shard(out, "batch", "seq", "d_model")
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits
+# ---------------------------------------------------------------------------
+
+def init_embed(b: ParamBuilder, cfg: ModelConfig):
+    b.make("embed", (cfg.vocab, cfg.d_model), ("vocab", "d_model"),
+           init="embed")
+    if not cfg.tie_embeddings:
+        b.make("lm_head", (cfg.vocab, cfg.d_model), ("vocab", "d_model"))
+    b.make("final_norm", (cfg.d_model,), ("d_model",), init="ones")
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    emb = params["embed"].astype(cfg.cdtype)
+    x = jnp.take(emb, tokens, axis=0)
+    return shard(x, "batch", "seq", "d_model")
+
+
+def logits_from_hidden(cfg: ModelConfig, params, x):
+    w = params.get("lm_head", params["embed"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,vd->btv", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """Mean token CE in fp32; labels == ignore_id are masked out."""
+    valid = labels != ignore_id
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def remat_policy(name: str):
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return None

@@ -1,0 +1,104 @@
+"""Multi-head Latent Attention (DeepSeek-V2), in the weight-absorbed form.
+
+The KV cache stores only the compressed latent c_kv (kv_lora) plus the
+shared rope key (rope_dim) per position — the memory win that defines
+MLA.  Queries are absorbed into the latent space (q_lat = q_nope @ W_uk)
+so attention scores are computed directly against the cached latents and
+the output is decompressed once per query (production decode path; the
+naive decompress-all-keys form is never materialized).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..runtime.sharding import shard
+from .layers import ParamBuilder, rmsnorm, rope, softmax_fp32
+
+
+def init_mla(b: ParamBuilder, cfg: ModelConfig, L: int, prefix: str = "attn"):
+    m, a = cfg.mla, cfg.attn
+    D, H = cfg.d_model, a.n_heads
+    s = b.sub(prefix)
+    s.make("wq", (L, D, H * (m.nope_dim + m.rope_dim)),
+           ("layers", "d_model", "heads"))
+    s.make("w_dkv", (L, D, m.kv_lora), ("layers", "d_model", "kv_lora"))
+    s.make("w_krope", (L, D, m.rope_dim), ("layers", "d_model", "head_dim"))
+    s.make("kv_norm", (L, m.kv_lora), ("layers", "kv_lora"), init="ones")
+    s.make("w_uk", (L, m.kv_lora, H * m.nope_dim),
+           ("layers", "kv_lora", "heads"))
+    s.make("w_uv", (L, m.kv_lora, H * m.v_dim),
+           ("layers", "kv_lora", "heads"))
+    s.make("wo", (L, H * m.v_dim, D), ("layers", "heads", "d_model"))
+
+
+def mla_attention(cfg: ModelConfig, p, x, positions, *, cache=None,
+                  cache_pos=None, causal=True):
+    m, a = cfg.mla, cfg.attn
+    H = a.n_heads
+    B, T, D = x.shape
+    cd = cfg.cdtype
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+
+    q = jnp.einsum("btd,dh->bth", x, p["wq"].astype(cd))
+    q = shard(q, "batch", "seq", "heads").reshape(B, T, H, m.nope_dim + m.rope_dim)
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim:]
+    q_rope = rope(q_rope, positions, a.rope_theta)
+
+    ckv = rmsnorm(jnp.einsum("btd,dl->btl", x, p["w_dkv"].astype(cd)),
+                  p["kv_norm"], cfg.norm_eps)
+    kr = jnp.einsum("btd,dr->btr", x, p["w_krope"].astype(cd))
+    kr = rope(kr[:, :, None, :], positions, a.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_pos, axis=1)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr.astype(cache["kr"].dtype), cache_pos, axis=1)
+        new_cache = {"ckv": cc, "kr": ck}
+        ckv, kr = cc.astype(cd), ck.astype(cd)
+    S = ckv.shape[1]
+
+    # absorb W_uk into the query -> latent-space scores
+    w_uk = p["w_uk"].astype(cd).reshape(m.kv_lora, H, m.nope_dim)
+    q_lat = jnp.einsum("bthn,lhn->bthl", q_nope, w_uk)
+    q_lat = shard(q_lat, "batch", "seq", "heads", None)
+    q_pos = positions if positions.ndim else positions[None]
+    kv_pos = jnp.arange(S)
+
+    def attend(ql, qr, qp):
+        scores = (jnp.einsum("bthl,bsl->bhts", ql, ckv,
+                             preferred_element_type=cd)
+                  + jnp.einsum("bthr,bsr->bhts", qr, kr,
+                               preferred_element_type=cd)) * scale
+        if causal:
+            mask = (qp[:, None] >= kv_pos[None, :])[None, None]
+            w = softmax_fp32(scores, mask).astype(cd)
+        else:
+            w = softmax_fp32(scores).astype(cd)
+        return jnp.einsum("bhts,bsl->bthl", w, ckv,
+                          preferred_element_type=cd)
+
+    qc_len = cfg.q_chunk
+    if T > qc_len and T % qc_len == 0 and q_pos.ndim == 1:
+        nc = T // qc_len
+        qls = jnp.moveaxis(q_lat.reshape(B, nc, qc_len, H, m.kv_lora), 1, 0)
+        qrs = jnp.moveaxis(q_rope.reshape(B, nc, qc_len, H, m.rope_dim), 1, 0)
+        ps = q_pos.reshape(nc, qc_len)
+        _, lats = jax.lax.scan(
+            lambda _, xs: (None, attend(*xs)), None, (qls, qrs, ps))
+        lat = jnp.moveaxis(lats, 0, 1).reshape(B, T, H, m.kv_lora)
+    else:
+        lat = attend(q_lat, q_rope, q_pos)
+
+    # decompress once per query
+    w_uv = p["w_uv"].astype(cd).reshape(m.kv_lora, H, m.v_dim)
+    out = jnp.einsum("bthl,lhv->bthv", lat, w_uv,
+                     preferred_element_type=cd).reshape(B, T, H * m.v_dim)
+    out = shard(out, "batch", "seq", "heads")
+    out = jnp.einsum("bth,hd->btd", out, p["wo"].astype(cd))
+    return shard(out, "batch", "seq", "d_model"), new_cache

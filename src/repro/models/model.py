@@ -1,0 +1,188 @@
+"""Model facade: uniform init/loss/prefill/decode over all families, plus
+abstract (no-allocation) init and ShapeDtypeStruct input specs for the
+multi-pod dry-run."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import transformer, hybrid, encdec, vlm
+
+
+def _family_mod(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return transformer
+    if cfg.family == "ssm":
+        return transformer_ssm
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family == "audio":
+        return encdec
+    if cfg.family == "vlm":
+        return vlm
+    raise ValueError(cfg.family)
+
+
+# ---- pure-SSM decoder LM (mamba2): reuse hybrid with period 0 --------------
+class _SSMModule:
+    """Mamba-2 decoder LM = hybrid backbone with no shared attention."""
+
+    @staticmethod
+    def init_params(cfg, rng):
+        from . import layers as ly
+        from .ssm import init_mamba
+        b = ly.ParamBuilder(rng, cfg.pdtype)
+        ly.init_embed(b, cfg)
+        mb = b.sub("mamba")
+        mb.make("ln", (cfg.n_layers, cfg.d_model), ("layers", "d_model"),
+                init="ones")
+        init_mamba(mb, cfg, cfg.n_layers)
+        return b.params, b.specs
+
+    @staticmethod
+    def _backbone(cfg, params, x, caches=None):
+        from . import layers as ly
+        from .ssm import mamba_block
+        policy = ly.remat_policy(cfg.remat)
+
+        def step(h, xs):
+            layer_p, layer_c = xs
+            hn = ly.rmsnorm(h, layer_p["ln"], cfg.norm_eps)
+            out, nc = mamba_block(cfg, layer_p["ssm"], hn, cache=layer_c)
+            return h + out, (nc if nc is not None else {})
+
+        step_fn = (jax.checkpoint(step, policy=policy, prevent_cse=False)
+                   if policy is not None and caches is None else step)
+        x, new_c = jax.lax.scan(step_fn, x, (params["mamba"], caches))
+        return x, (new_c if caches is not None else None)
+
+    @staticmethod
+    def loss_fn(cfg, params, batch):
+        from . import layers as ly
+        x = ly.embed_tokens(cfg, params, batch["tokens"])
+        x, _ = _SSMModule._backbone(cfg, params, x)
+        logits = ly.logits_from_hidden(cfg, params, x)
+        return ly.cross_entropy(logits, batch["labels"])
+
+    @staticmethod
+    def init_cache(cfg, batch, seq_len, dtype=None):
+        from .ssm import _dims
+        dtype = dtype or cfg.cdtype
+        s = cfg.ssm
+        d_in, nh, d_conv = _dims(cfg)
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch, s.conv - 1, d_conv), dtype),
+            "state": jnp.zeros((cfg.n_layers, batch, nh, s.headdim, s.state),
+                               jnp.float32),
+        }
+
+    @staticmethod
+    def cache_specs(cfg):
+        return {"conv": ("layers", "batch", "conv", "ssm_heads"),
+                "state": ("layers", "batch", "ssm_heads", None, "ssm_state")}
+
+    @staticmethod
+    def prefill(cfg, params, tokens, cache):
+        from . import layers as ly
+        x = ly.embed_tokens(cfg, params, tokens)
+        x, new_c = _SSMModule._backbone(cfg, params, x, caches=cache)
+        logits = ly.logits_from_hidden(cfg, params, x[:, -1:, :])
+        return logits[:, 0], new_c
+
+    @staticmethod
+    def decode_step(cfg, params, tokens, cache, pos):
+        from . import layers as ly
+        x = ly.embed_tokens(cfg, params, tokens[:, None])
+        x, new_c = _SSMModule._backbone(cfg, params, x, caches=cache)
+        logits = ly.logits_from_hidden(cfg, params, x)
+        return logits[:, 0], new_c
+
+
+transformer_ssm = _SSMModule
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---- params ------------------------------------------------------------
+    def init(self, rng):
+        return _family_mod(self.cfg).init_params(self.cfg, rng)
+
+    def abstract_init(self):
+        """(ShapeDtypeStruct params tree, logical-axis spec tree) without
+        allocating anything — used by the dry-run."""
+        side: dict[str, Any] = {}
+
+        def f(key):
+            p, s = _family_mod(self.cfg).init_params(self.cfg, key)
+            side["specs"] = s
+            return p
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, side["specs"]
+
+    # ---- steps ---------------------------------------------------------------
+    def loss(self, params, batch):
+        return _family_mod(self.cfg).loss_fn(self.cfg, params, batch)
+
+    def prefill(self, params, batch, cache):
+        mod = _family_mod(self.cfg)
+        if self.cfg.family in ("audio", "vlm"):
+            return mod.prefill(self.cfg, params, batch, cache)
+        return mod.prefill(self.cfg, params, batch["tokens"], cache)
+
+    def decode(self, params, tokens, cache, pos):
+        return _family_mod(self.cfg).decode_step(self.cfg, params, tokens,
+                                                 cache, pos)
+
+    # ---- caches ---------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int):
+        return _family_mod(self.cfg).init_cache(self.cfg, batch, seq_len)
+
+    def cache_specs(self):
+        return _family_mod(self.cfg).cache_specs(self.cfg)
+
+    def abstract_cache(self, batch: int, seq_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, seq_len))
+
+    # ---- dry-run input specs ---------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of the step
+        selected by shape.kind (tokens/labels/frames/img_embeds/cache)."""
+        cfg = self.cfg
+        B, T = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            batch = {"tokens": sds((B, T), i32), "labels": sds((B, T), i32)}
+            if cfg.family == "audio":
+                batch["frames"] = sds((B, cfg.enc_frames, cfg.d_model),
+                                      cfg.cdtype)
+            if cfg.family == "vlm":
+                n_txt = T - cfg.n_img_tokens
+                batch = {"tokens": sds((B, n_txt), i32),
+                         "labels": sds((B, n_txt), i32),
+                         "img_embeds": sds((B, cfg.n_img_tokens, cfg.d_model),
+                                           cfg.cdtype)}
+            return {"batch": batch}
+        if shape.kind == "prefill":
+            batch = {"tokens": sds((B, T), i32)}
+            if cfg.family == "audio":
+                batch["frames"] = sds((B, cfg.enc_frames, cfg.d_model),
+                                      cfg.cdtype)
+            if cfg.family == "vlm":
+                batch = {"tokens": sds((B, T - cfg.n_img_tokens), i32),
+                         "img_embeds": sds((B, cfg.n_img_tokens, cfg.d_model),
+                                           cfg.cdtype)}
+            cache = self.abstract_cache(B, T)
+            return {"batch": batch, "cache": cache}
+        if shape.kind == "decode":
+            cache = self.abstract_cache(B, T)
+            return {"tokens": sds((B,), i32), "cache": cache,
+                    "pos": sds((), i32)}
+        raise ValueError(shape.kind)

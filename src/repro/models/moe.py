@@ -1,0 +1,115 @@
+"""Mixture-of-Experts block: GShard-style grouped one-hot dispatch.
+
+Tokens are viewed as (G groups, Sg tokens) with groups following the batch
+sharding; experts are sharded over the `model` mesh axis (EP).  The
+dispatch/combine einsums reshard tokens from batch-sharded to
+expert-sharded layout — XLA SPMD inserts the all-to-alls (visible in the
+dry-run collective table; the §Perf loop tunes group_size/capacity and,
+beyond the baseline, swaps in a sort-based dispatch).
+
+Capacity dropping: tokens routed past an expert's capacity fall through
+via the residual connection (combine weights are zero), standard
+Switch/GShard semantics.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from ..runtime.sharding import shard
+from .layers import ParamBuilder
+
+
+def init_moe(b: ParamBuilder, cfg: ModelConfig, L: int, prefix: str = "moe"):
+    mo = cfg.moe
+    D, F, E = cfg.d_model, mo.expert_ff, mo.n_experts
+    s = b.sub(prefix)
+    s.make("router", (L, D, E), ("layers", "d_model", "experts"),
+           scale=1.0 / math.sqrt(D))
+    s.make("wi_g", (L, E, D, F), ("layers", "experts", "d_model", "expert_ffn"),
+           scale=1.0 / math.sqrt(D))
+    s.make("wi", (L, E, D, F), ("layers", "experts", "d_model", "expert_ffn"),
+           scale=1.0 / math.sqrt(D))
+    s.make("wo", (L, E, F, D), ("layers", "experts", "expert_ffn", "d_model"),
+           scale=1.0 / math.sqrt(F))
+    if mo.n_shared:
+        Fs = mo.n_shared * F
+        s.make("sh_wi_g", (L, D, Fs), ("layers", "d_model", "ffn"))
+        s.make("sh_wi", (L, D, Fs), ("layers", "d_model", "ffn"))
+        s.make("sh_wo", (L, Fs, D), ("layers", "ffn", "d_model"))
+
+
+def _capacity(sg: int, mo: MoEConfig) -> int:
+    c = int(math.ceil(sg * mo.top_k * mo.capacity_factor / mo.n_experts))
+    return max(1, -(-c // 4) * 4) if c > 4 else max(1, c)
+
+
+def moe_block(cfg: ModelConfig, p, x):
+    """x: (B, T, D) -> (out, aux_loss)."""
+    mo = cfg.moe
+    E, k = mo.n_experts, mo.top_k
+    B, T, D = x.shape
+    cd = cfg.cdtype
+
+    # group view: rows of at most group_size tokens
+    sg = min(mo.group_size, T)
+    n_split = T // sg if T % sg == 0 else 1
+    if T % sg != 0:
+        sg = T
+    G = B * n_split
+    xg = x.reshape(G, sg, D)
+    xg = shard(xg, "groups", None, "d_model")
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,Sg,E)
+    topv, topi = jax.lax.top_k(probs, k)                       # (G,Sg,k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    C = _capacity(sg, mo)
+    counts = jnp.zeros((G, E), jnp.int32)
+    dispatch = jnp.zeros((G, sg, E, C), cd)
+    combine = jnp.zeros((G, sg, E, C), jnp.float32)
+    for j in range(k):  # GShard: allocate capacity choice-by-choice
+        oh = jax.nn.one_hot(topi[..., j], E, dtype=jnp.int32)  # (G,Sg,E)
+        pos = jnp.cumsum(oh, axis=1) - 1 + counts[:, None, :]  # slot per token
+        counts = counts + oh.sum(axis=1)
+        keep = (pos < C) & (oh > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                                dtype=jnp.float32)[..., :C]    # (G,Sg,E,C)
+        sel = pos_oh * oh[..., None].astype(jnp.float32)
+        dispatch = dispatch + sel.astype(cd)
+        combine = combine + sel * topv[..., j][..., None, None]
+
+    dispatch = shard(dispatch, "groups", None, "experts", None)
+    combine = shard(combine, "groups", None, "experts", None)
+
+    # tokens -> expert buffers (all-to-all under EP sharding)
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch, xg.astype(cd),
+                     preferred_element_type=cd)
+    xin = shard(xin, "groups", "experts", None, "d_model")
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["wi_g"].astype(cd),
+                               preferred_element_type=cd)) \
+        * jnp.einsum("gecd,edf->gecf", xin, p["wi"].astype(cd),
+                     preferred_element_type=cd)
+    h = shard(h, "groups", "experts", None, "expert_ffn")
+    eout = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(cd),
+                      preferred_element_type=cd)
+    eout = shard(eout, "groups", "experts", None, "d_model")
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(cd), eout,
+                     preferred_element_type=cd)
+    out = out.reshape(B, T, D)
+
+    if mo.n_shared:
+        g = jax.nn.silu(jnp.einsum("btd,df->btf", x, p["sh_wi_g"].astype(cd)))
+        hs = g * jnp.einsum("btd,df->btf", x, p["sh_wi"].astype(cd))
+        out = out + jnp.einsum("btf,fd->btd", hs, p["sh_wo"].astype(cd))
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    frac = jnp.mean((jax.nn.one_hot(topi[..., 0], E)), axis=(0, 1))
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_p) * mo.aux_weight
+    return shard(out, "batch", "seq", "d_model"), aux

@@ -1,0 +1,167 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Train/prefill use the chunked block decomposition: quadratic attention-like
+intra-chunk term + inter-chunk recurrence carried by lax.scan (state
+(B, H, P, N)).  Decode is the O(1) single-step recurrence — this is what
+makes the `long_500k` cell sub-quadratic (DESIGN.md §6).
+
+TPU adaptation: chunk length defaults to 256 so the intra-chunk (cl, cl)
+kernels are MXU-shaped; the depthwise causal conv is unrolled into k
+static shifts (no conv primitive needed on the VPU path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..runtime.sharding import shard
+from .layers import ParamBuilder, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.headdim
+    d_conv = d_in + 2 * s.state
+    return d_in, nh, d_conv
+
+
+def init_mamba(b: ParamBuilder, cfg: ModelConfig, L: int, prefix: str = "ssm"):
+    s = cfg.ssm
+    d_in, nh, d_conv = _dims(cfg)
+    D = cfg.d_model
+    sb = b.sub(prefix)
+    sb.make("in_proj", (L, D, 2 * d_in + 2 * s.state + nh),
+            ("layers", "d_model", "ssm_heads"))
+    sb.make("conv_w", (L, s.conv, d_conv), ("layers", "conv", "ssm_heads"))
+    sb.make("conv_b", (L, d_conv), ("layers", "ssm_heads"), init="zeros")
+    sb.make("A_log", (L, nh), ("layers", "ssm_heads"), init="zeros")
+    sb.make("D_skip", (L, nh), ("layers", "ssm_heads"), init="ones")
+    sb.make("dt_bias", (L, nh), ("layers", "ssm_heads"), init="zeros")
+    sb.make("norm", (L, d_in), ("layers", "ssm_heads"), init="ones")
+    sb.make("out_proj", (L, d_in, D), ("layers", "ssm_heads", "d_model"))
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_in, nh, _ = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: 2 * d_in + 2 * s.state]
+    dt = zxbcdt[..., 2 * d_in + 2 * s.state:]
+    return z, xbc, dt
+
+
+def _conv_causal(xbc, w, bias):
+    """Depthwise causal conv via unrolled static shifts."""
+    k = w.shape[0]
+    T = xbc.shape[1]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = bias
+    for i in range(k):
+        out = out + pad[:, i: i + T, :] * w[i]
+    return out
+
+
+def _ssd_scan(cfg, xh, dt, A, Bm, Cm, state0=None):
+    """Chunked SSD.  xh: (B,T,H,P), dt: (B,T,H), A: (H,), Bm/Cm: (B,T,N).
+    Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    s = cfg.ssm
+    B, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    cl = s.chunk if T % s.chunk == 0 else T
+    nc = T // cl
+    f32 = jnp.float32
+
+    xc = xh.reshape(B, nc, cl, H, P)
+    dtc = dt.reshape(B, nc, cl, H).astype(f32)
+    Bc = Bm.reshape(B, nc, cl, N)
+    Cc = Cm.reshape(B, nc, cl, N)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, P, N), f32)
+    tri = jnp.tril(jnp.ones((cl, cl), bool))
+
+    def body(state, inp):
+        x_c, dt_c, b_c, c_c = inp                      # (B,cl,...)
+        dA = dt_c * A                                  # (B,cl,H) fp32
+        cum = jnp.cumsum(dA, axis=1)
+        gap = cum[:, :, None, :] - cum[:, None, :, :]  # (B,cl,cl,H)
+        Lm = jnp.exp(jnp.where(tri[None, :, :, None], gap, -jnp.inf))
+        xdt = x_c.astype(f32) * dt_c[..., None]
+        y_intra = jnp.einsum("bin,bjn,bijh,bjhp->bihp", c_c.astype(f32),
+                             b_c.astype(f32), Lm, xdt)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", c_c.astype(f32), state,
+                             jnp.exp(cum))
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)      # (B,cl,H)
+        st_new = jnp.einsum("bjn,bjh,bjhp->bhpn", b_c.astype(f32),
+                            decay_end * dt_c, x_c.astype(f32))
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + st_new
+        return state, y_intra + y_inter
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    final, ys = jax.lax.scan(body, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, P)
+    return y.astype(xh.dtype), final
+
+
+def mamba_block(cfg: ModelConfig, p, x, *, cache=None):
+    """x: (B,T,D).  cache: dict(conv (B,k-1,d_conv), state (B,H,P,N)) for
+    T==1 decode; None for train/prefill (prefill returns a fresh cache).
+    Returns (out, new_cache)."""
+    s = cfg.ssm
+    d_in, nh, d_conv = _dims(cfg)
+    B, T, D = x.shape
+    cd = cfg.cdtype
+    P = s.headdim
+
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(cd))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    z = shard(z, "batch", "seq", "ssm_heads")
+    xbc = shard(xbc, "batch", "seq", None)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+
+    if cache is not None and T == 1:  # single-step decode
+        conv_buf = cache["conv"]                       # (B, k-1, d_conv)
+        full = jnp.concatenate([conv_buf.astype(cd), xbc], axis=1)
+        w = p["conv_w"].astype(cd)
+        conv_out = p["conv_b"].astype(cd) + sum(
+            full[:, i, :] * w[i] for i in range(s.conv))
+        xbc_a = jax.nn.silu(conv_out)[:, None, :]      # (B,1,d_conv)
+        new_conv = full[:, 1:, :].astype(conv_buf.dtype)
+        xh = xbc_a[..., :d_in].reshape(B, nh, P)
+        Bm = xbc_a[..., d_in: d_in + s.state][:, 0]
+        Cm = xbc_a[..., d_in + s.state:][:, 0]
+        state = cache["state"].astype(jnp.float32)
+        dA = jnp.exp(dt_f[:, 0] * A)                   # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bm.astype(jnp.float32),
+                         dt_f[:, 0], xh.astype(jnp.float32))
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+        y = y + p["D_skip"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, 1, d_in).astype(cd)
+        new_cache = {"conv": new_conv, "state": state.astype(cache["state"].dtype)}
+    else:
+        xbc_a = jax.nn.silu(_conv_causal(xbc, p["conv_w"].astype(cd),
+                                         p["conv_b"].astype(cd)))
+        xh = xbc_a[..., :d_in].reshape(B, T, nh, P)
+        xh = shard(xh, "batch", "seq", "ssm_heads", None)
+        Bm = xbc_a[..., d_in: d_in + s.state]
+        Cm = xbc_a[..., d_in + s.state:]
+        y, final = _ssd_scan(cfg, xh, dt_f, A, Bm, Cm)
+        y = y + (p["D_skip"].astype(jnp.float32)[:, None]
+                 * xh.astype(jnp.float32)).astype(y.dtype)
+        y = y.reshape(B, T, d_in)
+        new_cache = None
+        if cache is not None:  # prefill: emit decode-ready cache
+            tail = xbc[:, -(s.conv - 1):, :] if T >= s.conv - 1 else jnp.pad(
+                xbc, ((0, 0), (s.conv - 1 - T, 0), (0, 0)))
+            new_cache = {"conv": tail.astype(cache["conv"].dtype),
+                         "state": final.astype(cache["state"].dtype)}
+
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(cd),
+                p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(cd))
+    return shard(out, "batch", "seq", "d_model"), new_cache

@@ -1,0 +1,214 @@
+"""Generic decoder-only transformer (dense / MoE / MLA) with scanned layer
+stacks.
+
+Layers are organized into *segments*: (n_steps, ffn_kinds) where each scan
+step applies len(ffn_kinds) consecutive layers (attention + that FFN kind).
+This expresses llama4's interleaved dense/MoE (24 steps of ("dense",
+"moe")), deepseek's leading dense layer ((1, ("dense",)) + (26, ("moe",))),
+and plain stacks ((L, ("dense",))) with a single scan body each — keeping
+the HLO small enough to compile 126-layer models in the dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..runtime.sharding import shard
+from . import layers as ly
+from .mla import init_mla, mla_attention
+from .moe import init_moe, moe_block
+
+
+def segments_of(cfg: ModelConfig) -> list[tuple[int, tuple[str, ...]]]:
+    g = max(1, cfg.layers_per_step)
+    mo = cfg.moe
+    if mo is None:
+        if cfg.n_layers % g:
+            g = 1
+        return [(cfg.n_layers // g, ("dense",) * g)]
+    segs = []
+    if mo.first_dense:
+        segs.append((mo.first_dense, ("dense",)))
+    rest = cfg.n_layers - mo.first_dense
+    if mo.period > 1:
+        assert rest % mo.period == 0
+        kinds = tuple("dense" if (j % mo.period) != mo.period - 1 else "moe"
+                      for j in range(mo.period))
+        # group g periods per scan step when divisible
+        n_steps = rest // mo.period
+        if g > 1 and n_steps % g == 0:
+            kinds = kinds * g
+            n_steps //= g
+        segs.append((n_steps, kinds))
+    else:
+        n_steps = rest
+        if g > 1 and rest % g == 0:
+            n_steps = rest // g
+            segs.append((n_steps, ("moe",) * g))
+        else:
+            segs.append((rest, ("moe",)))
+    return segs
+
+
+def _init_block(b: ly.ParamBuilder, cfg: ModelConfig, L: int, kind: str,
+                idx: int):
+    s = b.sub(f"l{idx}")
+    s.make("ln_attn", (L, cfg.d_model), ("layers", "d_model"), init="ones")
+    s.make("ln_mlp", (L, cfg.d_model), ("layers", "d_model"), init="ones")
+    if cfg.mla is not None:
+        init_mla(s, cfg, L)
+    else:
+        ly.init_attention(s, cfg, L)
+    if kind == "moe":
+        init_moe(s, cfg, L)
+    else:
+        ly.init_mlp(s, cfg, L)
+
+
+def init_params(cfg: ModelConfig, rng):
+    b = ly.ParamBuilder(rng, cfg.pdtype)
+    ly.init_embed(b, cfg)
+    for si, (n, kinds) in enumerate(segments_of(cfg)):
+        seg = b.sub(f"seg{si}")
+        for j, kind in enumerate(kinds):
+            _init_block(seg, cfg, n, kind, j)
+    return b.params, b.specs
+
+
+def _apply_block(cfg: ModelConfig, p, kind: str, x, positions, cache,
+                 cache_pos):
+    h = ly.rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    if cfg.mla is not None:
+        att, new_cache = mla_attention(cfg, p["attn"], h, positions,
+                                       cache=cache, cache_pos=cache_pos)
+    else:
+        att, new_cache = ly.attention(cfg, p["attn"], h, positions,
+                                      cache=cache, cache_pos=cache_pos)
+    x = x + att
+    h = ly.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "moe":
+        out, aux = moe_block(cfg, p["moe"], h)
+    else:
+        out = ly.mlp(cfg, p["mlp"], h)
+    return x + out, new_cache, aux
+
+
+def backbone(cfg: ModelConfig, params, x, positions, caches=None,
+             cache_pos=None):
+    """x: (B,T,D) hidden.  caches: None or {segK: {lJ: {k,v|ckv,kr}: (n,...)}}
+    Returns (hidden, new_caches, aux_loss)."""
+    policy = ly.remat_policy(cfg.remat)
+    new_caches = {} if caches is not None else None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for si, (n, kinds) in enumerate(segments_of(cfg)):
+        seg_p = params[f"seg{si}"]
+        seg_c = caches.get(f"seg{si}") if caches is not None else None
+
+        def step(carry, xs, kinds=kinds):
+            h, aux = carry
+            layer_p, layer_c = xs
+            new_c = {}
+            for j, kind in enumerate(kinds):
+                cj = layer_c.get(f"l{j}") if layer_c is not None else None
+                h, nc, a = _apply_block(cfg, layer_p[f"l{j}"], kind, h,
+                                        positions, cj, cache_pos)
+                if nc is not None:
+                    new_c[f"l{j}"] = nc
+                aux = aux + a
+            return (h, aux), new_c
+
+        step_fn = step
+        # remat only matters under grad; inference graphs skip it (a
+        # rematerialized prefill hoists f32 converts for nothing — §Perf B2)
+        if policy is not None and caches is None:
+            step_fn = jax.checkpoint(step, policy=policy,
+                                     prevent_cse=False)
+
+        (x, aux_total), seg_new = jax.lax.scan(
+            step_fn, (x, aux_total), (seg_p, seg_c))
+        if new_caches is not None:
+            new_caches[f"seg{si}"] = seg_new
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    x = ly.embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    x, _, aux = backbone(cfg, params, x, positions)
+    logits = ly.logits_from_hidden(cfg, params, x)
+    return ly.cross_entropy(logits, labels) + aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    """Zeroed KV cache pytree matching backbone()'s expectations."""
+    dtype = dtype or cfg.cdtype
+    caches = {}
+    for si, (n, kinds) in enumerate(segments_of(cfg)):
+        seg = {}
+        for j in range(len(kinds)):
+            if cfg.mla is not None:
+                m = cfg.mla
+                seg[f"l{j}"] = {
+                    "ckv": jnp.zeros((n, batch, seq_len, m.kv_lora), dtype),
+                    "kr": jnp.zeros((n, batch, seq_len, m.rope_dim), dtype),
+                }
+            else:
+                a = cfg.attn
+                seg[f"l{j}"] = {
+                    "k": jnp.zeros((n, batch, seq_len, a.n_kv, a.head_dim), dtype),
+                    "v": jnp.zeros((n, batch, seq_len, a.n_kv, a.head_dim), dtype),
+                }
+        caches[f"seg{si}"] = seg
+    return caches
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical axes for cache leaves (mirrors init_cache)."""
+    def leaf(_):
+        return ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+
+    def leaf_mla(name):
+        return ("layers", "batch", "kv_seq", "kv_lora")
+
+    specs = {}
+    for si, (n, kinds) in enumerate(segments_of(cfg)):
+        seg = {}
+        for j in range(len(kinds)):
+            if cfg.mla is not None:
+                seg[f"l{j}"] = {"ckv": leaf_mla("ckv"), "kr": leaf_mla("kr")}
+            else:
+                seg[f"l{j}"] = {"k": leaf("k"), "v": leaf("v")}
+        specs[f"seg{si}"] = seg
+    return specs
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache):
+    """Fill the cache with T prompt tokens; returns (last_logits, cache)."""
+    x = ly.embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    x, new_caches, _ = backbone(cfg, params, x, positions, caches=cache,
+                                cache_pos=0)
+    logits = ly.logits_from_hidden(cfg, params, x[:, -1:, :])
+    return logits[:, 0], new_caches
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos):
+    """One token per sequence.  tokens: (B,) int32; pos: scalar cache index.
+    Returns (logits (B, V), new_cache)."""
+    x = ly.embed_tokens(cfg, params, tokens[:, None])
+    positions = pos[None] if hasattr(pos, "ndim") else jnp.asarray([pos])
+    x, new_caches, _ = backbone(cfg, params, x, positions, caches=cache,
+                                cache_pos=pos)
+    logits = ly.logits_from_hidden(cfg, params, x)
+    return logits[:, 0], new_caches

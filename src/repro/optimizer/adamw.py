@@ -1,0 +1,153 @@
+"""Pure-pytree AdamW + Adafactor with large-scale options.
+
+No optax dependency.  Features used by the distributed runtime:
+  * state dtype control (fp32 default; bf16 m/v for ZeRO-friendly memory —
+    used by the llama3-405b config to fit a v5e pod),
+  * global-norm gradient clipping,
+  * decoupled weight decay,
+  * works under jit/pjit: state is a pytree that inherits param shardings
+    (see runtime/sharding.py for ZeRO placement over the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float | None = 1.0
+    state_dtype: Any = jnp.float32
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (new_p.astype(p.dtype), m32.astype(self.state_dtype),
+                    v32.astype(self.state_dtype))
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any   # row second-moment (for matrices) or full v (for vectors)
+    vc: Any   # col second-moment (zeros for vectors)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second moments — O(n+m) state for an (n,m) matrix.  The
+    memory-saving optimizer option for the 400B-class configs."""
+    lr: float | Callable = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+    def init(self, params):
+        def vr(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(step=jnp.zeros((), jnp.int32),
+                              vr=jax.tree.map(vr, params),
+                              vc=jax.tree.map(vc, params))
+
+    def update(self, grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-self.decay)
+        lr = self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+        def upd(g, vr, vc, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            if p.ndim >= 2:
+                nvr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                nvc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                r = nvr / jnp.maximum(nvr.mean(axis=-1, keepdims=True), self.eps)
+                approx = r[..., None] * nvc[..., None, :]
+                u = g32 * jax.lax.rsqrt(jnp.maximum(approx, self.eps))
+            else:
+                nvr = beta * vr + (1 - beta) * g2
+                nvc = vc
+                u = g32 * jax.lax.rsqrt(jnp.maximum(nvr, self.eps))
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            new_p = p.astype(jnp.float32) - lr * u
+            return new_p.astype(p.dtype), nvr, nvc
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), AdafactorState(step=step, vr=pick(1), vc=pick(2))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1) -> Callable:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup, warm, cos)
+    return sched

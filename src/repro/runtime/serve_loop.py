@@ -1,0 +1,108 @@
+"""Serving step builders: batched prefill + decode with the paper's HABF
+integrated as a first-class admission/blocklist gate (DESIGN.md §2).
+
+  * prefill: optional HABF *admission probe* — the two-round query (pure
+    jnp form, lowers on any backend; the Pallas kernel is the TPU runtime
+    path) over the batch's prefix fingerprints against the pod-local
+    KV-prefix-cache index.  A hit means the prefix KV is resident; a false
+    positive costs a wasted cache probe + re-prefill — the weighted-FPR
+    cost the paper minimizes.
+  * decode: optional fused n-gram blocklist probe on the trailing window
+    of emitted tokens.
+
+Both gates are pure functions of replicated filter tables (a few MB,
+VMEM-resident on TPU) and add no cross-device communication.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.habf_query.ref import habf_query_ref
+from ..kernels.ngram_blocklist.ref import ngram_fingerprints
+from ..kernels.common import probe_bits, hash_value, fastrange
+from ..models.model import Model
+
+
+def habf_gate_tables(habf) -> dict:
+    """Replicated device arrays for the fused admission probe."""
+    from ..kernels.habf_query.ops import device_tables
+    return device_tables(habf)
+
+
+def admission_probe(tables: dict, prefix_lo, prefix_hi):
+    return habf_query_ref(
+        prefix_lo, prefix_hi, tables["words"],
+        tables["hx_hashidx"].astype(jnp.int32),
+        tables["hx_endbit"].astype(jnp.int32),
+        tables["c1"], tables["c2"], tables["mul"],
+        tables["f_consts"][0], tables["f_consts"][1], tables["f_consts"][2],
+        tables["h0_idx"], m=tables["m"], omega=tables["omega"],
+        k=tables["k"], double_hash=tables["double_hash"])
+
+
+def make_prefill_step(model: Model, habf_tables: dict | None = None):
+    def prefill_step(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        out = {"next_token": jnp.argmax(logits, axis=-1).astype(jnp.int32)}
+        if habf_tables is not None:
+            out["admit"] = admission_probe(habf_tables, batch["prefix_lo"],
+                                           batch["prefix_hi"])
+        return out, cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, blocklist: dict | None = None,
+                     ngram_n: int = 4):
+    """decode_step(params, tokens, cache, pos[, last_window]) -> out, cache.
+    last_window: (B, ngram_n) trailing tokens incl. the new one, for the
+    fused blocklist probe."""
+
+    def decode_step(params, tokens, cache, pos, last_window=None):
+        logits, cache = model.decode(params, tokens, cache, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = {"next_token": nxt}
+        if blocklist is not None and last_window is not None:
+            win = jnp.concatenate([last_window[:, 1:], nxt[:, None]], axis=1)
+            lo, hi = ngram_fingerprints(win, win.shape[1])
+            acc = jnp.ones(lo[:, -1].shape, jnp.uint32)
+            for j in range(blocklist["k"]):
+                hv = hash_value(lo[:, -1], hi[:, -1], blocklist["c1"][j],
+                                blocklist["c2"][j], blocklist["mul"][j])
+                acc = acc & probe_bits(blocklist["words"],
+                                       fastrange(hv, blocklist["m"]))
+            out["blocked"] = acc.astype(jnp.bool_)
+            out["window"] = win
+        return out, cache
+
+    return decode_step
+
+
+def blocklist_tables(bf) -> dict:
+    t = bf.device_tables()
+    idx = t["hash_idx"]
+    return {"words": jnp.asarray(t["words"]), "m": t["m"], "k": len(idx),
+            "c1": jnp.asarray(t["c1"][idx]), "c2": jnp.asarray(t["c2"][idx]),
+            "mul": jnp.asarray(t["mul"][idx])}
+
+
+def generate(model: Model, params, prompt_batch: dict, cache, steps: int,
+             decode_step=None, pos0: int | None = None):
+    """Greedy generation driver (host loop; each step jit-compiled once)."""
+    decode_step = decode_step or make_decode_step(model)
+    prefill = jax.jit(make_prefill_step(model))
+    out, cache = prefill(params, prompt_batch, cache)
+    tok = out["next_token"]
+    T = prompt_batch["tokens"].shape[1]
+    if pos0 is None:
+        pos0 = T + (model.cfg.n_img_tokens if model.cfg.family == "vlm" else 0)
+    dstep = jax.jit(decode_step)
+    toks = [tok]
+    for i in range(steps - 1):
+        out, cache = dstep(params, tok, cache, jnp.int32(pos0 + i))
+        tok = out["next_token"]
+        toks.append(tok)
+    return jnp.stack(toks, axis=1), cache

@@ -1,0 +1,187 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates activations/params with *logical* axis names; a rule
+table maps them to physical mesh axes.  Swapping the rule table is how the
+perf loop changes sharding without touching model code (EXPERIMENTS.md
+§Perf).  Outside a `use_mesh(...)` context every annotation is a no-op, so
+the same model code runs in single-device tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Iterable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None=replicated)
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),        # DP over pod+data
+    "seq": None,                     # optionally "model" for SP (rule swap)
+    "d_model": None,
+    "heads": "model",                # TP: attention heads
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",                  # TP: MLP hidden
+    "vocab": "model",                # TP: embedding/logits
+    "experts": "model",              # EP: MoE experts
+    "expert_ffn": None,
+    "ssm_heads": "model",            # TP: Mamba inner heads
+    "ssm_state": None,
+    "kv_lora": None,
+    "layers": None,                  # scan axis; "pod" under pipeline rules
+    "groups": ("pod", "data"),       # MoE dispatch groups follow batch
+    "conv": None,
+    "frames": None,
+    "kv_seq": None,              # KV-cache storage seq dim (decode/prefill
+                                 # rules map it to "model": split-KV)
+}
+
+# sequence-parallel rule swap: shard long sequences over the model axis
+# (decode-time KV caches, norms).  Used by serve paths + perf iterations.
+SP_RULES = dict(DEFAULT_RULES, seq="model", heads=None, kv_heads=None)
+
+# decode rules: flash-decoding-style split-KV.  The KV cache's seq dim is
+# sharded over `model` (GQA kv_heads < mesh width can't shard; a 32k cache
+# can).  Weight shardings unchanged; the q-len-1 activations' "seq" axis
+# degrades to replicated via divisibility.  Attention contractions over
+# the sharded S produce partial sums + a tiny all-reduce — the GSPMD
+# equivalent of split-KV decoding.
+DECODE_RULES = dict(DEFAULT_RULES, kv_seq="model")
+
+# prefill under memory pressure: cache stored seq-sharded, activations not
+PREFILL_SPLITKV_RULES = dict(DEFAULT_RULES, kv_seq="model")
+
+_state = threading.local()
+
+
+def _ctx():
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict[str, Any] | None = None):
+    """Activate mesh + logical rules for model annotations."""
+    entry = (mesh, dict(DEFAULT_RULES if rules is None else rules))
+    _ctx().append(entry)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ctx().pop()
+
+
+def active() -> tuple[Mesh, dict] | None:
+    stack = _ctx()
+    return stack[-1] if stack else None
+
+
+def logical_to_spec(axes: Iterable[str | None],
+                    rules: dict[str, Any]) -> P:
+    """Map logical axis names to a PartitionSpec, dropping duplicate mesh
+    axes (a mesh axis may appear only once in a spec)."""
+    used: set[str] = set()
+    parts = []
+    for ax in axes:
+        rule = rules.get(ax) if ax is not None else None
+        if rule is None:
+            parts.append(None)
+            continue
+        rs = (rule,) if isinstance(rule, str) else tuple(rule)
+        keep = tuple(r for r in rs if r not in used)
+        used.update(keep)
+        if not keep:
+            parts.append(None)
+        elif len(keep) == 1:
+            parts.append(keep[0])
+        else:
+            parts.append(keep)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard(x, *axes: str | None):
+    """Annotate an intermediate with logical axes (no-op without a mesh).
+    Divisibility-aware: non-dividing mesh axes degrade to replicated."""
+    ctx = active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    ns = spec_for(mesh, rules, axes, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def heads_divisible(logical: str, n_heads: int) -> bool:
+    """True iff the mesh extent mapped to `logical` divides n_heads —
+    guards flat (B,T,H*Dh) head annotations: if whole heads don't divide,
+    GSPMD would shard head_dim (a contraction dim) and all-reduce the
+    attention scores (the llama4 40-heads-on-16 pathology, §Perf B1)."""
+    ctx = active()
+    if ctx is None:
+        return True
+    mesh, rules = ctx
+    rule = rules.get(logical)
+    if rule is None:
+        return True
+    rs = (rule,) if isinstance(rule, str) else tuple(rule)
+    extent = 1
+    for r in rs:
+        if r in mesh.axis_names:
+            extent *= mesh.shape[r]
+    return n_heads % extent == 0
+
+
+def spec_for(mesh: Mesh, rules: dict[str, Any], axes,
+             shape=None) -> NamedSharding:
+    """Resolve logical axes to a NamedSharding.  When `shape` is given the
+    spec degrades gracefully: mesh axes whose extent does not divide the
+    dim are dropped (explicit in_shardings require exact divisibility —
+    e.g. 8 KV heads on a 16-wide model axis, vocab 51865, batch 1)."""
+    spec = logical_to_spec(axes, rules)
+
+    def keep(part, dim=None):
+        if part is None:
+            return None
+        parts = part if isinstance(part, tuple) else (part,)
+        kept = []
+        extent = 1
+        for p in parts:
+            if p not in mesh.axis_names:
+                continue
+            n = mesh.shape[p]
+            if dim is not None and dim % (extent * n) != 0:
+                continue
+            kept.append(p)
+            extent *= n
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else tuple(kept)
+
+    parts = list(spec)
+    if shape is not None:
+        parts = parts + [None] * (len(shape) - len(parts))
+        parts = [keep(p, shape[i]) for i, p in enumerate(parts)]
+    else:
+        parts = [keep(p) for p in parts]
+    while parts and parts[-1] is None:
+        parts.pop()
+    return NamedSharding(mesh, P(*parts))
+
+
+def tree_shardings(mesh: Mesh, spec_tree, rules: dict[str, Any] | None = None,
+                   shapes=None):
+    """Map a pytree of logical-axis tuples to NamedShardings.  `shapes`
+    (optional, same structure with .shape leaves) enables divisibility-
+    aware degradation."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    if shapes is None:
+        return jax.tree.map(
+            lambda axes: spec_for(mesh, rules, axes),
+            spec_tree, is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(
+        lambda axes, shp: spec_for(mesh, rules, axes, shape=shp.shape),
+        spec_tree, shapes, is_leaf=lambda x: isinstance(x, tuple))

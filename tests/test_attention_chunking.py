@@ -1,0 +1,80 @@
+"""Exactness of query-chunked attention (the A4 perf change) and the
+segment-grouping knob (A5): both must be bit-for-bit semantics-preserving."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REDUCED
+from repro.models import layers as ly
+from repro.models.model import Model
+
+
+def test_q_chunked_attention_matches_unchunked():
+    cfg = REDUCED["mistral-nemo-12b"].replace(q_chunk=8)
+    cfg_full = cfg.replace(q_chunk=1 << 30)
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    l_chunk = float(Model(cfg).loss(params, batch))
+    l_full = float(Model(cfg_full).loss(params, batch))
+    assert abs(l_chunk - l_full) < 1e-5, (l_chunk, l_full)
+
+
+def test_q_chunked_mla_matches_unchunked():
+    cfg = REDUCED["deepseek-v2-lite-16b"].replace(q_chunk=8)
+    cfg_full = cfg.replace(q_chunk=1 << 30)
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    l_chunk = float(Model(cfg).loss(params, batch))
+    l_full = float(Model(cfg_full).loss(params, batch))
+    assert abs(l_chunk - l_full) < 1e-5
+
+
+def test_layers_per_step_grouping_equivalent():
+    """Grouping g layers per scan step must not change the math."""
+    base = REDUCED["qwen3-0.6b"].replace(n_layers=4, layers_per_step=1,
+                                         compute_dtype="float32")
+    grouped = base.replace(layers_per_step=2)
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(0, base.vocab, (2, 16)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    p1, _ = Model(base).init(jax.random.PRNGKey(3))
+    l1 = float(Model(base).loss(p1, batch))
+    # rebuild grouped params from the same flat weights: grouping reshapes
+    # the stack (4, ...) -> two stacks of (2, ...) under l0/l1 keys
+    p2, _ = Model(grouped).init(jax.random.PRNGKey(3))
+
+    def regroup(flat_seg):
+        out = {"l0": {}, "l1": {}}
+        def walk(src, d0, d1):
+            for k, v in src.items():
+                if isinstance(v, dict):
+                    d0[k], d1[k] = {}, {}
+                    walk(v, d0[k], d1[k])
+                else:
+                    d0[k] = v[0::2]
+                    d1[k] = v[1::2]
+        walk(flat_seg, out["l0"], out["l1"])
+        return out
+
+    p2 = dict(p2)
+    p2["seg0"] = regroup(p1["seg0"]["l0"])
+    for k in ("embed", "final_norm"):
+        p2[k] = p1[k]
+    if "lm_head" in p1:
+        p2["lm_head"] = p1["lm_head"]
+    l2 = float(Model(grouped).loss(p2, batch))
+    assert abs(l1 - l2) < 1e-5, (l1, l2)
+
+
+def test_grouping_falls_back_when_indivisible():
+    from repro.models.transformer import segments_of
+    cfg = REDUCED["qwen3-0.6b"].replace(n_layers=5, layers_per_step=2)
+    segs = segments_of(cfg)
+    assert sum(n * len(k) for n, k in segs) == 5

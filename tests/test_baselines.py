@@ -1,0 +1,78 @@
+import numpy as np
+import pytest
+
+from repro.core import (XorFilter, xor_filter_for_space, WeightedBloomFilter,
+                        zipf_costs, weighted_fpr)
+from repro.core.learned import build_lbf, build_adabf
+from repro.core.datasets import make_shalla, make_ycsb
+
+
+def _keys(rng, n):
+    return rng.choice(np.uint64(1) << np.uint64(62), size=n,
+                      replace=False).astype(np.uint64)
+
+
+def test_xor_filter_no_fn_and_fpr():
+    rng = np.random.default_rng(0)
+    keys = _keys(rng, 20_000)
+    pos, neg = keys[:10_000], keys[10_000:]
+    xf = XorFilter(pos, fingerprint_bits=8)
+    assert xf.query(pos).all()
+    fpr = xf.query(neg).mean()
+    assert fpr < 3 * 2.0 ** -8  # ~1/256
+    xf12 = XorFilter(pos, fingerprint_bits=12)
+    assert xf12.query(neg).mean() < fpr
+
+
+def test_xor_filter_space_sizing():
+    rng = np.random.default_rng(1)
+    pos = _keys(rng, 10_000)
+    xf = xor_filter_for_space(pos, total_bytes=10_000 * 10 // 8)
+    assert xf.query(pos).all()
+    assert 6 <= xf.fp_bits <= 9  # 10 bpk / 1.23 ~ 8
+
+
+def test_wbf_no_fn_and_cost_sensitivity():
+    rng = np.random.default_rng(2)
+    keys = _keys(rng, 30_000)
+    pos, neg = keys[:15_000], keys[15_000:]
+    pos_costs = zipf_costs(len(pos), 1.0, seed=1)
+    wbf = WeightedBloomFilter(15_000 * 10, k_bar=5, k_max=10)
+    wbf.build(pos, pos_costs)
+    assert wbf.query(pos, pos_costs).all()
+    neg_costs = zipf_costs(len(neg), 1.0, seed=2)
+    w = weighted_fpr(wbf.query(neg, neg_costs), neg_costs)
+    assert w < 0.2
+
+
+def test_lbf_no_fn():
+    ds = make_shalla(scale=0.004, seed=0)
+    total = ds.n_pos * 12 // 8
+    lbf = build_lbf(ds.pos_strs, ds.pos_u64, ds.neg_strs, ds.neg_u64,
+                    total_bytes=total, model="mlp", seed=0)
+    assert lbf.query(ds.pos_strs, ds.pos_u64).all()
+    assert lbf.query(ds.neg_strs, ds.neg_u64).mean() < 0.3
+
+
+def test_slbf_no_fn():
+    ds = make_shalla(scale=0.003, seed=1)
+    total = ds.n_pos * 12 // 8
+    slbf = build_lbf(ds.pos_strs, ds.pos_u64, ds.neg_strs, ds.neg_u64,
+                     total_bytes=total, model="mlp", seed=0, sandwich=True)
+    assert slbf.query(ds.pos_strs, ds.pos_u64).all()
+
+
+def test_adabf_no_fn():
+    ds = make_shalla(scale=0.003, seed=2)
+    total = ds.n_pos * 12 // 8
+    ada = build_adabf(ds.pos_strs, ds.pos_u64, ds.neg_strs, ds.neg_u64,
+                      total_bytes=total, model="mlp", seed=0)
+    assert ada.query(ds.pos_strs, ds.pos_u64).all()
+
+
+def test_datasets_disjoint_and_deterministic():
+    for mk in (make_shalla, make_ycsb):
+        a = mk(scale=0.002, seed=5)
+        b = mk(scale=0.002, seed=5)
+        np.testing.assert_array_equal(a.pos_u64, b.pos_u64)
+        assert not set(a.pos_u64.tolist()) & set(a.neg_u64.tolist())

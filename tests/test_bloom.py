@@ -1,0 +1,60 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BloomFilter, DoubleHashBloomFilter, optimal_k
+from repro.core.theory import bf_fpr
+
+
+@given(st.integers(0, 2**32), st.integers(1, 6), st.integers(100, 5000))
+@settings(max_examples=20, deadline=None)
+def test_no_false_negatives(seed, k, n):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 1 << 63, n).astype(np.uint64)
+    bf = BloomFilter(n * 10, k=k)
+    bf.insert(keys)
+    assert bf.query(keys).all()
+
+
+def test_fpr_close_to_theory():
+    rng = np.random.default_rng(0)
+    n, b = 50_000, 10
+    keys = rng.integers(0, 1 << 63, 2 * n).astype(np.uint64)
+    pos, neg = keys[:n], keys[n:]
+    k = optimal_k(b)
+    bf = BloomFilter(n * b, k=k)
+    bf.insert(pos)
+    measured = bf.query(neg).mean()
+    expected = bf_fpr(b, k)
+    assert 0.5 * expected < measured < 2.0 * expected
+
+
+def test_per_key_phi():
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 1 << 63, 100).astype(np.uint64)
+    phi = rng.integers(0, 22, (100, 3))
+    bf = BloomFilter(10_000, k=3)
+    bf.insert(keys, phi=phi)
+    assert bf.query(keys, phi=phi).all()
+    # with different phi the same keys are (mostly) not found
+    phi2 = (phi + 7) % 22
+    assert bf.query(keys, phi=phi2).mean() < 0.5
+
+
+def test_double_hash_variant():
+    rng = np.random.default_rng(2)
+    keys = rng.integers(0, 1 << 63, 5000).astype(np.uint64)
+    bf = DoubleHashBloomFilter(50_000, k=4)
+    bf.insert(keys)
+    assert bf.query(keys).all()
+    other = rng.integers(0, 1 << 63, 5000).astype(np.uint64)
+    assert bf.query(other).mean() < 0.2
+
+
+def test_bit_vector_clear():
+    bf = BloomFilter(1024, k=1)
+    bf.bits.set_bits(np.asarray([5, 37, 1023]))
+    assert bf.bits.count() == 3
+    bf.bits.clear_bit(37)
+    assert bf.bits.count() == 2
+    assert bf.bits.test_bits(np.asarray([5, 37, 1023])).tolist() == [1, 0, 1]

@@ -1,0 +1,69 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.integers(0, 10, (3,)), jnp.int32),
+                  "d": jnp.asarray(rng.normal(size=(2, 2)), jnp.bfloat16)}}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path)
+    t = _tree()
+    ck.save(7, t, aux={"data_step": 7})
+    out, man = ck.restore(jax.tree.map(jnp.zeros_like, t))
+    assert man["step"] == 7 and man["aux"]["data_step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_policy_and_latest(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(tmp_path)
+    t = _tree(1)
+    ck.save_async(5, t)
+    ck.wait()
+    out, man = ck.restore(t)
+    assert man["step"] == 5
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, _tree())
+    # a stale tmp dir from a "crashed" writer must not break anything
+    stale = tmp_path / ".tmp_step_00000002_999"
+    stale.mkdir()
+    ck.save(2, _tree(2))
+    assert ck.latest_step() == 2
+
+
+def test_structure_mismatch_raises(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, _tree())
+    with pytest.raises(AssertionError):
+        ck.restore({"only": jnp.zeros((2,))})
+
+
+def test_restore_with_shardings(tmp_path):
+    ck = Checkpointer(tmp_path)
+    t = _tree(3)
+    ck.save(1, t)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    out, _ = ck.restore(t, shardings=shardings)
+    assert jax.tree.leaves(out)[0].sharding == NamedSharding(mesh, P())

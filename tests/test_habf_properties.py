@@ -1,0 +1,99 @@
+"""Hypothesis property tests on the paper's core invariants (§III/§IV),
+beyond the example-based tests in test_habf.py."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HABF, BloomFilter, weighted_fpr, zipf_costs
+
+
+def _sets(seed, n):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(np.uint64(1) << np.uint64(62), 2 * n,
+                      replace=False).astype(np.uint64)
+    return keys[:n], keys[n:], rng
+
+
+@given(st.integers(0, 2**32), st.floats(0.0, 2.5), st.integers(8, 14))
+@settings(max_examples=10, deadline=None)
+def test_tpjo_never_hurts_round1_fpr(seed, skew, bpk):
+    """TPJO only converts collision keys to negatives: the optimized
+    first-round (weighted) FPR must be <= the pre-optimization FPR of the
+    same filter under H0 (Eq. 9: F*_bf = F_bf - t/|O|)."""
+    pos, neg, _ = _sets(seed, 3000)
+    costs = zipf_costs(len(neg), skew, seed)
+    h = HABF.build(pos, neg, costs, total_bytes=3000 * bpk // 8, k=3,
+                   seed=seed)
+    # rebuild the unoptimized round-1 filter: same m, same H0, all pos
+    bf0 = BloomFilter(h.bf.bits.m, h.config.k)
+    bf0.insert(pos)
+    w_before = weighted_fpr(bf0.query(neg), costs)
+    w_after = weighted_fpr(h.bf.query(neg), costs)
+    assert w_after <= w_before + 1e-12
+
+
+@given(st.integers(0, 2**32))
+@settings(max_examples=8, deadline=None)
+def test_optimized_count_matches_round1_gain(seed):
+    """Eq. 9 exactly: surviving round-1 FPs == collisions seen minus those
+    optimized minus those fixed as side effects of earlier adjustments."""
+    pos, neg, _ = _sets(seed, 3000)
+    h = HABF.build(pos, neg, None, total_bytes=3000 * 10 // 8, k=3,
+                   seed=seed)
+    s = h.summary()
+    still_fp = int(h.bf.query(neg).sum())
+    assert still_fp == (s["n_collision_total"] - s["n_optimized"]
+                        - s["n_side_fixed"])
+
+
+@given(st.integers(0, 2**32), st.integers(2, 5))
+@settings(max_examples=8, deadline=None)
+def test_hashexpressor_fpr_bound(seed, k):
+    """§III-F: F_h <= t / omega for keys never inserted."""
+    pos, neg, rng = _sets(seed, 3000)
+    h = HABF.build(pos, neg, None, total_bytes=3000 * 10 // 8, k=k,
+                   seed=seed)
+    t = h.hx.n_inserted
+    probe = rng.integers(1 << 40, 1 << 61, 20_000).astype(np.uint64)
+    _, valid = h.hx.query(probe)
+    # 3-sigma slack on the binomial around the t/omega bound
+    bound = t / h.hx.omega
+    sigma = np.sqrt(max(bound, 1e-9) / len(probe))
+    assert valid.mean() <= bound + 4 * sigma + 1e-4
+
+
+@given(st.integers(0, 2**32))
+@settings(max_examples=6, deadline=None)
+def test_device_host_query_agree_everywhere(seed):
+    """The jnp two-round query must agree with the host query on positive,
+    negative, and never-seen keys (any divergence breaks zero-FNR on TPU)."""
+    from repro.kernels import habf_query_u64
+    pos, neg, rng = _sets(seed, 2000)
+    h = HABF.build(pos, neg, zipf_costs(len(neg), 1.0, seed),
+                   total_bytes=2000 * 10 // 8, k=3, seed=seed)
+    unseen = rng.integers(1 << 40, 1 << 61, 4000).astype(np.uint64)
+    for keys in (pos, neg, unseen):
+        host = h.query(keys)
+        dev = np.asarray(habf_query_u64(h, keys, use_kernel=False))
+        np.testing.assert_array_equal(host, dev)
+
+
+@given(st.integers(0, 2**32), st.floats(0.5, 3.0))
+@settings(max_examples=6, deadline=None)
+def test_cost_ordering_respected(seed, skew):
+    """TPJO optimizes in descending cost order: the total cost of
+    surviving false positives should be <= the cost of the same NUMBER of
+    the most expensive initial collisions (cheap keys get sacrificed)."""
+    pos, neg, _ = _sets(seed, 3000)
+    costs = zipf_costs(len(neg), skew, seed)
+    h = HABF.build(pos, neg, costs, total_bytes=3000 * 9 // 8, k=3,
+                   seed=seed)
+    surviving = h.bf.query(neg)
+    n_surv = int(surviving.sum())
+    if n_surv == 0:
+        return
+    bf0 = BloomFilter(h.bf.bits.m, h.config.k)
+    bf0.insert(pos)
+    init_fp_costs = np.sort(costs[bf0.query(neg)])[::-1]
+    surv_cost = costs[surviving].sum()
+    worst_case = init_fp_costs[:n_surv].sum()
+    assert surv_cost <= worst_case + 1e-9

@@ -1,0 +1,74 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HashExpressor
+
+
+@given(st.integers(0, 2**32), st.integers(2, 5), st.integers(4, 60))
+@settings(max_examples=25, deadline=None)
+def test_insert_then_query_exact(seed, k, n_keys):
+    """Zero-FNR invariant: every successfully inserted key retrieves its
+    exact phi, even after later insertions (walks never clobbered)."""
+    rng = np.random.default_rng(seed)
+    omega = 40 * n_keys  # roomy
+    hx = HashExpressor(omega, k=k)
+    inserted = {}
+    keys = rng.integers(0, 1 << 63, n_keys).astype(np.uint64)
+    for key in keys:
+        phi = rng.choice(22, size=k, replace=False)
+        ok, _ = hx.try_insert(key, phi, rng, commit=True)
+        if ok:
+            inserted[int(key)] = set(phi.tolist())
+    assert inserted, "at least one insertion should succeed"
+    got_phi, valid = hx.query(np.asarray(list(inserted), np.uint64))
+    assert valid.all()
+    for row, key in zip(got_phi, inserted):
+        assert set(row.tolist()) == inserted[key]
+
+
+def test_tentative_plan_does_not_mutate():
+    rng = np.random.default_rng(0)
+    hx = HashExpressor(128, k=3)
+    before = (hx.hashidx.copy(), hx.endbit.copy())
+    ok, plan = hx.plan_insert(np.uint64(12345), [1, 5, 9], rng)
+    assert ok
+    np.testing.assert_array_equal(hx.hashidx, before[0])
+    np.testing.assert_array_equal(hx.endbit, before[1])
+    hx.commit_plan(plan)
+    assert hx.hashidx.sum() > 0 and hx.endbit.sum() == 1
+
+
+def test_uninserted_keys_mostly_invalid():
+    rng = np.random.default_rng(3)
+    hx = HashExpressor(4096, k=3)
+    for i in range(40):
+        hx.try_insert(np.uint64(i), rng.choice(22, 3, replace=False), rng)
+    probe = rng.integers(1 << 40, 1 << 62, 5000).astype(np.uint64)
+    _, valid = hx.query(probe)
+    # F_h <= t/omega (paper §III-F): 40/4096 ~ 1%
+    assert valid.mean() <= 3 * 40 / 4096 + 0.01
+
+
+def test_insertion_failure_when_crowded():
+    rng = np.random.default_rng(4)
+    hx = HashExpressor(8, k=3)
+    fails = 0
+    for i in range(50):
+        ok, _ = hx.try_insert(np.uint64(i), rng.choice(22, 3, replace=False), rng)
+        fails += not ok
+    assert fails > 0  # a tiny table must reject most insertions
+
+
+def test_shared_cells_save_writes():
+    """Case-2 sharing: inserting a key whose needed hash already sits in the
+    mapped cell requires fewer new writes."""
+    rng = np.random.default_rng(5)
+    hx = HashExpressor(64, k=2)
+    total_writes = 0
+    for i in range(30):
+        ok, nw = hx.try_insert(np.uint64(i * 7919), [i % 22, (i + 3) % 22], rng)
+        if ok:
+            total_writes += nw
+    nonempty = int((hx.hashidx != 0).sum())
+    assert nonempty <= total_writes  # sharing implies fewer cells than writes+endbits

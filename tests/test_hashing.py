@@ -1,0 +1,76 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+
+
+def test_family_deterministic():
+    f1 = hashing.make_family(8, seed=42)
+    f2 = hashing.make_family(8, seed=42)
+    for k in f1:
+        np.testing.assert_array_equal(f1[k], f2[k])
+    assert (hashing.make_family(8, seed=43)["c1"] != f1["c1"]).any()
+    assert (f1["mul"] % 2 == 1).all()  # odd multipliers
+
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=64),
+       st.integers(0, hashing.DEFAULT_N_HASH - 1),
+       st.sampled_from([97, 1 << 10, 12345, 1 << 24]))
+@settings(max_examples=30, deadline=None)
+def test_host_device_agree(keys, hidx, m):
+    """numpy (construction) and jnp (query) hashing must agree bit-exactly."""
+    keys = np.asarray(keys, np.uint64)
+    host = hashing.hash_index_np(keys, hidx, m)
+    lo, hi = hashing.split_u64(keys)
+    fam = hashing.FAMILY
+    dev = hashing.hash_index_jnp(jnp.asarray(lo), jnp.asarray(hi),
+                                 jnp.uint32(fam["c1"][hidx]),
+                                 jnp.uint32(fam["c2"][hidx]),
+                                 jnp.uint32(fam["mul"][hidx]), m)
+    np.testing.assert_array_equal(host, np.asarray(dev))
+    assert (host >= 0).all() and (host < m).all()
+
+
+def test_umulhi32_matches_u64():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << 32, 1000, dtype=np.uint64)
+    b = rng.integers(1, 1 << 32, 1000, dtype=np.uint64)
+    want = ((a * b) >> np.uint64(32)).astype(np.uint32)
+    got = hashing.umulhi32_jnp(jnp.asarray(a.astype(np.uint32)),
+                               jnp.asarray(b.astype(np.uint32)))
+    np.testing.assert_array_equal(want, np.asarray(got))
+
+
+def test_hash_uniformity():
+    """chi^2-ish sanity: bucket counts close to uniform."""
+    keys = np.arange(200_000, dtype=np.uint64)
+    m = 256
+    for hidx in [0, 7, 21]:
+        idx = hashing.hash_index_np(keys, hidx, m)
+        counts = np.bincount(idx, minlength=m)
+        expected = len(keys) / m
+        assert abs(counts.mean() - expected) < 1e-6
+        assert counts.std() < 4 * np.sqrt(expected)
+
+
+def test_hash_functions_differ():
+    keys = np.arange(1000, dtype=np.uint64)
+    idx0 = hashing.hash_index_np(keys, 0, 1 << 20)
+    idx1 = hashing.hash_index_np(keys, 1, 1 << 20)
+    assert (idx0 != idx1).mean() > 0.99
+
+
+def test_fingerprint_bytes():
+    fps = hashing.fingerprint_bytes(["a", "b", "ab", "ba", "", "a" * 100])
+    assert len(set(fps.tolist())) == 6
+    again = hashing.fingerprint_bytes(["a", "b"])
+    np.testing.assert_array_equal(fps[:2], again)
+
+
+def test_double_hash_spread():
+    keys = np.arange(50_000, dtype=np.uint64)
+    i0 = hashing.fastrange_np(hashing.double_hash_value_np(keys, 0), 1 << 16)
+    i5 = hashing.fastrange_np(hashing.double_hash_value_np(keys, 5), 1 << 16)
+    assert (i0 != i5).mean() > 0.99

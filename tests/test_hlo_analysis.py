@@ -1,0 +1,71 @@
+"""Unit tests for the trip-count-scaled HLO analyzer on a synthetic
+module (the roofline's data source — deliverable g)."""
+from repro.launch import hlo_analysis as H
+
+HLO = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %i0 = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]{1,0}) tuple(%i0, %x)
+  %w = (s32[], f32[8,16]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %big = f32[32,64]{1,0} constant({...})
+  %v = f32[8,64]{1,0} dot(%x, %big), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_trip_count_scaling():
+    r = H.analyze(HLO)
+    # while-body dot: 2*8*16*16 = 4096 flops x 10 trips = 40960
+    # entry dot: 2*8*64*16 = 16384 (x1)... lhs contracting dim 1 -> 16
+    assert r["flops"] == 10 * 2 * 8 * 16 * 16 + 2 * 8 * 64 * 16
+    ar = r["collectives"]["all-reduce"]
+    assert ar["count"] == 10
+    assert ar["bytes"] == 10 * 8 * 16 * 4
+
+
+def test_shape_parsing():
+    assert H._nbytes(H._shapes_in("f32[8,16]{1,0}")) == 512
+    assert H._nbytes(H._shapes_in("(bf16[4,4]{1,0}, s32[])")) == 36
+    assert H._nbytes(H._shapes_in("pred[100]")) == 100
+
+
+def test_promoted_all_reduce_counted_at_wire_dtype():
+    hlo = HLO.replace("to_apply=%add", "to_apply=%add.clone_promoted")
+    r = H.analyze(hlo)
+    assert r["collectives"]["all-reduce"]["bytes"] == 10 * 8 * 16 * 4 // 2
+
+
+def test_memory_proxy_counts_dots():
+    r = H.analyze(HLO)
+    # body dot: (operands 8*16*4 + 16*16*4 + out 8*16*4) x 10 trips
+    body_dot = (512 + 1024 + 512) * 10
+    entry_dot = 512 + 32 * 64 * 4 + 8 * 64 * 4
+    body_ar = 2 * 512 * 10      # collectives touch HBM (read+write)
+    assert r["hbm_bytes"] == body_dot + entry_dot + body_ar

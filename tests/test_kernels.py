@@ -1,0 +1,115 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle vs
+host numpy, swept over shapes and table sizes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import BloomFilter, DoubleHashBloomFilter, HABF, zipf_costs
+from repro.core import hashing
+from repro.kernels import (bloom_query_u64, habf_query_u64, ngram_blocklist,
+                           build_blocklist_bf)
+from repro.kernels.bloom_query.ops import bloom_query
+from repro.kernels.ngram_blocklist.ref import ngram_blocklist_ref
+
+
+def _keys(rng, n):
+    return rng.integers(0, 1 << 63, n).astype(np.uint64)
+
+
+@pytest.mark.parametrize("n_keys", [1, 7, 1024, 1025, 5000])
+@pytest.mark.parametrize("m_bits", [4096, 1 << 18])
+def test_bloom_kernel_matches_host(n_keys, m_bits):
+    rng = np.random.default_rng(n_keys + m_bits)
+    pos = _keys(rng, 2000)
+    bf = BloomFilter(m_bits, k=4)
+    bf.insert(pos)
+    probe = np.concatenate([pos[:n_keys // 2], _keys(rng, n_keys - n_keys // 2)])
+    host = bf.query(probe)
+    dev = np.asarray(bloom_query_u64(bf, probe, use_kernel=True))
+    ref = np.asarray(bloom_query_u64(bf, probe, use_kernel=False))
+    np.testing.assert_array_equal(host, dev)
+    np.testing.assert_array_equal(host, ref)
+
+
+@pytest.mark.parametrize("k", [2, 3, 6])
+def test_bloom_kernel_k_sweep(k):
+    rng = np.random.default_rng(k)
+    pos = _keys(rng, 1000)
+    bf = BloomFilter(1 << 16, k=k)
+    bf.insert(pos)
+    probe = _keys(rng, 3000)
+    np.testing.assert_array_equal(
+        bf.query(probe), np.asarray(bloom_query_u64(bf, probe)))
+
+
+def test_bloom_kernel_double_hash():
+    rng = np.random.default_rng(5)
+    pos = _keys(rng, 1000)
+    bf = DoubleHashBloomFilter(1 << 16, k=4)
+    bf.insert(pos)
+    probe = np.concatenate([pos, _keys(rng, 2000)])
+    np.testing.assert_array_equal(
+        bf.query(probe), np.asarray(bloom_query_u64(bf, probe)))
+
+
+@pytest.mark.parametrize("fast", [False, True])
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_habf_kernel_matches_host(fast, k):
+    rng = np.random.default_rng(10 * k + fast)
+    keys = rng.choice(np.uint64(1) << np.uint64(62), 12_000,
+                      replace=False).astype(np.uint64)
+    pos, neg = keys[:6000], keys[6000:]
+    h = HABF.build(pos, neg, zipf_costs(len(neg), 1.0, 1),
+                   total_bytes=6000 * 10 // 8, k=k, seed=0, fast=fast)
+    probe = np.concatenate([pos[:2000], neg[:3000]])
+    host = h.query(probe)
+    dev = np.asarray(habf_query_u64(h, probe, use_kernel=True))
+    ref = np.asarray(habf_query_u64(h, probe, use_kernel=False))
+    np.testing.assert_array_equal(host, ref)
+    np.testing.assert_array_equal(host, dev)
+    # zero FNR holds on-device as well
+    assert np.asarray(habf_query_u64(h, pos)).all()
+
+
+@pytest.mark.parametrize("B,T,n", [(1, 64, 3), (4, 300, 4), (9, 1024, 5)])
+def test_ngram_kernel_matches_ref(B, T, n):
+    rng = np.random.default_rng(B * T + n)
+    tokens = rng.integers(0, 32000, (B, T)).astype(np.int32)
+    # blocklist: 50 n-grams actually present in the batch + 50 random
+    rows = rng.integers(B, size=50)
+    starts = rng.integers(0, T - n, 50)
+    present = np.stack([tokens[b, s:s + n] for b, s in zip(rows, starts)])
+    n_distinct = len({(int(b), int(s)) for b, s in zip(rows, starts)})
+    absent = rng.integers(0, 32000, (50, n)).astype(np.int32)
+    bf = build_blocklist_bf(np.concatenate([present, absent]), 1 << 16, k=4)
+    t = bf.device_tables()
+    args = (jnp.asarray(tokens), jnp.asarray(t["words"]),
+            jnp.asarray(t["c1"][t["hash_idx"]]), jnp.asarray(t["c2"][t["hash_idx"]]),
+            jnp.asarray(t["mul"][t["hash_idx"]]))
+    out_k = np.asarray(ngram_blocklist(*args, m=t["m"], k=4, n=n,
+                                       use_kernel=True))
+    out_r = np.asarray(ngram_blocklist(*args, m=t["m"], k=4, n=n,
+                                       use_kernel=False))
+    np.testing.assert_array_equal(out_k, out_r)
+    # every inserted present n-gram must be flagged at its end position
+    for b, s in zip(rows, starts):
+        assert out_k[b, s + n - 1], f"missed inserted n-gram at {b},{s}"
+    assert out_k.sum() >= n_distinct * 0.9
+    assert not out_k[:, : n - 1].any()
+
+
+def test_ngram_no_false_negative_property():
+    rng = np.random.default_rng(42)
+    tokens = rng.integers(0, 1000, (2, 256)).astype(np.int32)
+    n = 4
+    grams = np.stack([tokens[i, s:s + n] for i in range(2)
+                      for s in range(0, 256 - n, 17)])
+    bf = build_blocklist_bf(grams, 1 << 15, k=3)
+    t = bf.device_tables()
+    out = np.asarray(ngram_blocklist(
+        jnp.asarray(tokens), jnp.asarray(t["words"]),
+        jnp.asarray(t["c1"][t["hash_idx"]]), jnp.asarray(t["c2"][t["hash_idx"]]),
+        jnp.asarray(t["mul"][t["hash_idx"]]), m=t["m"], k=3, n=n))
+    for i in range(2):
+        for s in range(0, 256 - n, 17):
+            assert out[i, s + n - 1], f"missed inserted n-gram at {i},{s}"

@@ -1,0 +1,90 @@
+"""Unit + property tests for logical-axis sharding resolution."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.runtime import sharding as sh
+
+
+def _mesh(shape, names):
+    # AbstractMesh: spec resolution is pure metadata (works on 1 device)
+    return AbstractMesh(shape, names)
+
+
+def test_logical_to_spec_basics():
+    rules = dict(sh.DEFAULT_RULES)
+    spec = sh.logical_to_spec(("batch", "seq", "heads"), rules)
+    assert spec == P(("pod", "data"), None, "model")
+
+
+def test_duplicate_mesh_axis_dropped():
+    rules = dict(sh.DEFAULT_RULES)
+    # batch uses data; a second data-mapped axis must degrade to None
+    rules["seq"] = "data"
+    spec = sh.logical_to_spec(("batch", "seq"), rules)
+    assert spec == P(("pod", "data"))
+
+
+def test_divisibility_degradation():
+    big = _mesh((2, 4), ("data", "model"))
+    # kv_heads=2 cannot shard over model=4 -> replicated
+    ns = sh.spec_for(big, sh.DEFAULT_RULES,
+                     ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                     shape=(4, 8, 64, 2, 16))
+    assert ns.spec == P(None, "data")
+    # but 8 kv heads shard fine over 4
+    ns2 = sh.spec_for(big, sh.DEFAULT_RULES,
+                      ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                      shape=(4, 8, 64, 8, 16))
+    assert ns2.spec == P(None, "data", None, "model")
+
+
+def test_decode_rules_shard_kv_seq():
+    big = _mesh((2, 4), ("data", "model"))
+    ns = sh.spec_for(big, sh.DECODE_RULES,
+                     ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                     shape=(4, 8, 64, 2, 16))
+    assert ns.spec == P(None, "data", "model")
+
+
+def test_missing_mesh_axis_dropped():
+    single = _mesh((2, 2), ("data", "model"))  # no "pod"
+    ns = sh.spec_for(single, sh.DEFAULT_RULES, ("batch",), shape=(8,))
+    assert ns.spec == P("data")
+
+
+@given(st.lists(st.sampled_from([None, "batch", "seq", "heads", "ffn",
+                                 "vocab", "experts", "kv_seq", "d_model"]),
+                min_size=1, max_size=5),
+       st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 16]), min_size=1,
+                max_size=5))
+@settings(max_examples=50, deadline=None)
+def test_spec_never_violates_divisibility(axes, dims):
+    n = min(len(axes), len(dims))
+    axes, dims = axes[:n], tuple(dims[:n])
+    m = _mesh((2, 2), ("data", "model"))
+    ns = sh.spec_for(m, sh.DEFAULT_RULES, axes, shape=dims)
+    for i, part in enumerate(ns.spec):
+        if part is None:
+            continue
+        parts = part if isinstance(part, tuple) else (part,)
+        extent = int(np.prod([m.shape[p] for p in parts]))
+        assert dims[i] % extent == 0
+    # no mesh axis twice
+    used = [p for part in ns.spec if part is not None
+            for p in (part if isinstance(part, tuple) else (part,))]
+    assert len(used) == len(set(used))
+
+
+def test_heads_divisible_helper():
+    m = _mesh((2, 16), ("data", "model"))
+    sh._ctx().append((m, dict(sh.DEFAULT_RULES)))
+    try:
+        assert sh.heads_divisible("heads", 32)
+        assert not sh.heads_divisible("heads", 6)
+        assert sh.heads_divisible("heads", 40) is False  # llama4: 40 % 16
+    finally:
+        sh._ctx().pop()
+    assert sh.heads_divisible("heads", 7)  # no mesh -> permissive

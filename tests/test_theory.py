@@ -1,0 +1,58 @@
+"""Paper §IV bounds verified empirically (the code behind Fig. 8)."""
+import numpy as np
+import pytest
+
+from repro.core import HABF, BloomFilter, theory
+
+
+def _build(b, k, n=8000, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(np.uint64(1) << np.uint64(62), 2 * n,
+                      replace=False).astype(np.uint64)
+    pos, neg = keys[:n], keys[n:]
+    h = HABF.build(pos, neg, None, total_bytes=int(n * b / 8), k=k, seed=seed)
+    return h, pos, neg
+
+
+@pytest.mark.parametrize("k", [2, 4, 6])
+def test_fbf_star_upper_bound_holds(k):
+    """Eq. 19: measured F*_bf must stay below the theoretical upper bound."""
+    b = 10
+    h, pos, neg = _build(b, k)
+    measured = h.bf.query(neg).mean()          # F*_bf: round-1 FPR after TPJO
+    s = h.summary()
+    fbf = s["n_collision_total"] / s["n_neg"]  # empirical pre-opt FPR
+    # P'_c is bounded below via Theorem 4.1's P_xi (conservative proxy)
+    p_c = theory.p_xi_lower(b * (1 - h.config.delta / (1 + h.config.delta)), k)
+    bound = theory.fbf_star_upper(fbf, s["n_collision_initial"], p_c, k,
+                                  s["omega"], s["n_neg"])
+    assert measured <= bound + 1e-9, (measured, bound)
+
+
+@pytest.mark.parametrize("b", [6, 10, 13])
+def test_fbf_star_bound_vs_b(b):
+    h, pos, neg = _build(b, 4)
+    measured = h.bf.query(neg).mean()
+    s = h.summary()
+    fbf = s["n_collision_total"] / s["n_neg"]
+    p_c = theory.p_xi_lower(b, 4)
+    bound = theory.fbf_star_upper(fbf, s["n_collision_initial"], p_c, 4,
+                                  s["omega"], s["n_neg"])
+    assert measured <= bound + 1e-9
+
+
+def test_p_xi_lower_monotone():
+    # higher bits-per-key -> more singly-mapped units
+    vals = [theory.p_xi_lower(b, 3) for b in (4, 8, 16)]
+    assert vals[0] < vals[1] < vals[2]
+    assert 0 < vals[0] < 1
+
+
+def test_habf_fpr_close_to_fbf_star():
+    """§III-F: with t << omega, F_habf ~ F*_bf."""
+    h, pos, neg = _build(10, 3, n=12000)
+    fbf_star = h.bf.query(neg).mean()
+    fhabf = h.query(neg).mean()
+    t = h.hx.n_inserted
+    upper = theory.habf_fpr_upper(fbf_star, t, h.hx.omega)
+    assert fhabf <= upper * 1.5 + 2e-3  # slack: F_h endbit-uniformity assumption
