@@ -16,7 +16,9 @@ def kernel_throughput(scale=0.01, seed=0, n_query=200_000):
     the number demonstrates correctness plumbing, not TPU performance; the
     jnp ref path is the portable production fallback."""
     import jax
-    from repro.kernels import habf_query_u64, bloom_query_u64
+    from repro.kernels import query
+    from repro.core.hashing import split_u64
+    import jax.numpy as jnp
 
     rows = []
     ds = make_dataset("shalla", scale, seed)
@@ -24,6 +26,10 @@ def kernel_throughput(scale=0.01, seed=0, n_query=200_000):
                    total_bytes=ds.n_pos * 10 // 8, k=3, seed=seed)
     rng = np.random.default_rng(seed)
     q = rng.choice(np.concatenate([ds.pos_u64, ds.neg_u64]), n_query)
+    lo, hi = split_u64(q)
+    lo, hi = jnp.asarray(lo), jnp.asarray(hi)
+    habf_art = h.to_artifact()
+    bloom_art = h.bf.to_artifact()
 
     def bench(fn, name):
         fn()  # compile/warm
@@ -34,11 +40,12 @@ def kernel_throughput(scale=0.01, seed=0, n_query=200_000):
                      f"keys_per_s={n_query / dt:.3g}"))
 
     bench(lambda: h.query(q), "host")
-    bench(lambda: habf_query_u64(h, q, use_kernel=False), "habf_jnp_ref")
-    bench(lambda: habf_query_u64(h, q, use_kernel=True), "habf_pallas_interp")
-    bf = h.bf
-    bench(lambda: bloom_query_u64(bf, q, use_kernel=False), "bloom_jnp_ref")
-    bench(lambda: bloom_query_u64(bf, q, use_kernel=True),
+    bench(lambda: query(habf_art, lo, hi, use_kernel=False), "habf_jnp_ref")
+    bench(lambda: query(habf_art, lo, hi, use_kernel=True),
+          "habf_pallas_interp")
+    bench(lambda: query(bloom_art, lo, hi, use_kernel=False),
+          "bloom_jnp_ref")
+    bench(lambda: query(bloom_art, lo, hi, use_kernel=True),
           "bloom_pallas_interp")
     return rows
 

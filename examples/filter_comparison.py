@@ -1,33 +1,28 @@
 """Mini reproduction of the paper's headline comparison (Fig. 10/11 at
-reduced scale): weighted FPR vs space for HABF / f-HABF / BF / Xor / WBF
-under uniform and Zipf(1.0) costs.  Full-scale sweeps: benchmarks/run.py.
+reduced scale): weighted FPR vs space for every filter in the unified
+registry under uniform and Zipf(1.0) costs.  Full-scale sweeps:
+benchmarks/run.py.
 
   PYTHONPATH=src python examples/filter_comparison.py
 """
 import numpy as np
 
-from repro.core import (HABF, BloomFilter, WeightedBloomFilter, optimal_k,
-                        weighted_fpr, xor_filter_for_space, zipf_costs)
+from repro.core import SpaceBudget, make_filter, weighted_fpr, zipf_costs
 from repro.core.datasets import make_shalla
+
+FILTERS = ("habf", "fhabf", "bloom", "xor", "wbf")
 
 ds = make_shalla(scale=0.01, seed=0)
 print(f"# dataset shalla-like scale=0.01: {ds.n_pos} pos / {ds.n_neg} neg")
-print("skew,bits_per_key,habf,fhabf,bf,xor,wbf")
+print("skew,bits_per_key," + ",".join(FILTERS))
 
 for skew in (0.0, 1.0):
     costs = zipf_costs(ds.n_neg, skew, seed=1)
     for bpk in (8, 10, 12, 14):
-        total = ds.n_pos * bpk // 8
-        habf = HABF.build(ds.pos_u64, ds.neg_u64, costs, total_bytes=total,
-                          k=3, seed=0)
-        fh = HABF.build(ds.pos_u64, ds.neg_u64, costs, total_bytes=total,
-                        k=3, seed=0, fast=True)
-        bf = BloomFilter(total * 8, k=optimal_k(bpk))
-        bf.insert(ds.pos_u64)
-        xf = xor_filter_for_space(ds.pos_u64, total)
-        wbf = WeightedBloomFilter(total * 8, k_bar=optimal_k(bpk))
-        wbf.build(ds.pos_u64, None)
-        row = [weighted_fpr(f.query(ds.neg_u64), costs)
-               for f in (habf, fh, bf, xf)]
-        row.append(weighted_fpr(wbf.query(ds.neg_u64), costs))
+        space = SpaceBudget.from_bits_per_key(bpk, ds.n_pos)
+        row = []
+        for name in FILTERS:
+            f = make_filter(name, ds.pos_u64, ds.neg_u64, costs,
+                            space=space, seed=0)
+            row.append(weighted_fpr(f.query(ds.neg_u64), costs))
         print(f"{skew},{bpk}," + ",".join(f"{v:.3e}" for v in row))

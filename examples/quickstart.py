@@ -1,28 +1,29 @@
-"""Quickstart: build an HABF, see it beat a Bloom filter at equal memory,
-and run the same query through the Pallas device kernel.
+"""Quickstart for the unified filter API: build any registered filter with
+`make_filter`, see HABF beat a Bloom filter at equal memory, export a
+typed pytree artifact, and run the same query through the device path.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (HABF, BloomFilter, optimal_k, weighted_fpr,
-                        zipf_costs)
+from repro.core import SpaceBudget, available_filters, make_filter, \
+    weighted_fpr, zipf_costs
 from repro.core.datasets import make_shalla
-from repro.kernels import habf_query_u64
+from repro.kernels import load_artifact, query_keys
 
 # 1. keys: synthetic Shalla-like URL blacklist (paper §V-C)
 ds = make_shalla(scale=0.01, seed=0)
 print(f"dataset: {ds.n_pos} positive / {ds.n_neg} negative keys")
+print(f"registry: {', '.join(available_filters())}")
 
 # 2. skewed per-key costs (Zipf 1.0, paper §V-F)
 costs = zipf_costs(ds.n_neg, skew=1.0, seed=1)
 
-# 3. build HABF and a standard BF with the SAME total memory
-total_bytes = ds.n_pos * 10 // 8          # 10 bits/key
-habf = HABF.build(ds.pos_u64, ds.neg_u64, costs, total_bytes=total_bytes,
-                  k=3, seed=0)
-bf = BloomFilter(total_bytes * 8, k=optimal_k(10))
-bf.insert(ds.pos_u64)
+# 3. build HABF and a standard BF with the SAME space budget
+space = SpaceBudget.from_bits_per_key(10, ds.n_pos)   # 10 bits/key
+habf = make_filter("habf", ds.pos_u64, ds.neg_u64, costs, space=space,
+                   seed=0)
+bf = make_filter("bloom", ds.pos_u64, space=space)
 
 print(f"zero FNR: {bool(habf.query(ds.pos_u64).all())}")
 print(f"weighted FPR  HABF: {weighted_fpr(habf.query(ds.neg_u64), costs):.3e}")
@@ -31,8 +32,17 @@ s = habf.summary()
 print(f"TPJO: {s['n_optimized']}/{s['n_collision_total']} collision keys "
       f"optimized, {s['hx_inserted']} keys in HashExpressor")
 
-# 4. the same two-round query on device (Pallas kernel, interpret on CPU)
-dev = np.asarray(habf_query_u64(habf, ds.neg_u64))
+# 4. the same two-round query on device (Pallas kernel, interpret on CPU):
+#    to_artifact() gives a typed pytree — it jits, vmaps, device_puts, and
+#    save/load round-trips through one npz for serving hot-swap.
+art = habf.to_artifact()
+dev = np.asarray(query_keys(art, ds.neg_u64))
 host = habf.query(ds.neg_u64)
 assert (dev == host).all()
 print(f"device kernel matches host query on {len(dev)} keys")
+
+art.save("/tmp/habf_artifact.npz")
+dev2 = np.asarray(query_keys(load_artifact("/tmp/habf_artifact.npz"),
+                             ds.neg_u64))
+assert (dev2 == host).all()
+print("artifact npz round-trip matches too")

@@ -1,4 +1,7 @@
-"""HABF core — the paper's contribution + all compared baselines."""
+"""HABF core — the paper's contribution + all compared baselines, behind
+one membership contract (`Filter` protocol + string registry, see api.py)."""
+from .api import (Filter, SpaceBudget, available_filters, make_filter,
+                  register_filter)
 from .habf import HABF, HABFConfig, build_habf, build_fhabf
 from .bloom import BloomFilter, DoubleHashBloomFilter, optimal_k
 from .hash_expressor import HashExpressor
@@ -9,6 +12,8 @@ from .metrics import weighted_fpr, fpr, fnr
 from . import hashing, theory, datasets
 
 __all__ = [
+    "Filter", "SpaceBudget", "available_filters", "make_filter",
+    "register_filter",
     "HABF", "HABFConfig", "build_habf", "build_fhabf",
     "BloomFilter", "DoubleHashBloomFilter", "optimal_k",
     "HashExpressor", "XorFilter", "xor_filter_for_space",

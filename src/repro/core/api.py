@@ -1,0 +1,188 @@
+"""Unified membership-filter contract (the paper's cross-filter comparison,
+§V, made structural).
+
+Every compared structure — HABF / f-HABF (the contribution), BF, double-
+hashing BF, Xor, WBF, and the learned LBF/SLBF/Ada-BF family — answers the
+same question: "is this key a member?"  This module pins that down:
+
+  * ``SpaceBudget`` — the one space currency (total bytes; helpers for the
+    paper's bits-per-key axis).
+  * ``Filter`` — the protocol every filter implements:
+    ``query(keys) -> bool (n,)``, ``size_bytes``, ``summary()``, and
+    ``to_artifact()`` (typed pytree for the device query path, see
+    ``repro.kernels.artifacts``).
+  * a string registry: ``make_filter("habf", pos, neg, costs,
+    space=SpaceBudget(...), seed=0)`` — one construction surface for
+    examples, benchmarks, and serving.
+
+Keys may be given as uint64 fingerprints or as raw strings/bytes
+(fingerprinted via FNV-1a); learned filters additionally *require* the
+string form to featurize.  ``costs`` is the per-negative-key false-positive
+cost (the weighted-FPR objective); cost-weighted *insertion* (WBF) takes
+``pos_costs=`` instead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import numpy as np
+
+from .hashing import as_str_keys, as_u64_keys
+
+
+@dataclass(frozen=True)
+class SpaceBudget:
+    """Total space a filter may occupy (model + tables for learned ones)."""
+    total_bytes: int
+
+    @property
+    def total_bits(self) -> int:
+        return int(self.total_bytes) * 8
+
+    @classmethod
+    def from_bits_per_key(cls, bits_per_key: float, n_keys: int) -> "SpaceBudget":
+        return cls(max(8, int(n_keys * bits_per_key) // 8))
+
+    def bits_per_key(self, n_keys: int) -> float:
+        return self.total_bits / max(1, n_keys)
+
+
+@runtime_checkable
+class Filter(Protocol):
+    """The unified membership contract.
+
+    ``query`` takes uint64 fingerprints or raw strings and returns a bool
+    (n,) array with zero false negatives on the built positive set.
+    ``to_artifact`` exports a typed, frozen, pytree-registered device
+    artifact consumed by ``repro.kernels.query``.
+    """
+
+    def query(self, keys) -> np.ndarray: ...
+
+    @property
+    def size_bytes(self) -> float: ...
+
+    def summary(self) -> dict: ...
+
+    def to_artifact(self) -> Any: ...
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[..., Filter]] = {}
+
+
+def register_filter(name: str, builder: Callable[..., Filter] | None = None):
+    """Register a builder under ``name`` (usable as a decorator).
+
+    Builder signature: ``builder(pos_keys, neg_keys, costs, *, space, seed,
+    **kw) -> Filter``.
+    """
+    def _register(fn):
+        _REGISTRY[name] = fn
+        return fn
+
+    return _register(builder) if builder is not None else _register
+
+
+def available_filters() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_filter(name: str, pos_keys, neg_keys=None, costs=None, *,
+                space: SpaceBudget | int, seed: int = 0, **kw) -> Filter:
+    """Build any registered filter through the unified surface.
+
+    ``space`` may be a SpaceBudget or a raw byte count.  ``costs`` is the
+    per-negative false-positive cost vector (ignored by cost-oblivious
+    filters).
+    """
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown filter {name!r}; available: "
+                       f"{', '.join(available_filters())}")
+    if not isinstance(space, SpaceBudget):
+        space = SpaceBudget(int(space))
+    return _REGISTRY[name](pos_keys, neg_keys, costs, space=space, seed=seed,
+                           **kw)
+
+
+def _require_strs(name: str, keys):
+    strs = as_str_keys(keys)
+    if strs is None:
+        raise TypeError(f"{name} is a learned filter and needs string keys "
+                        "to featurize; pass the raw strings, not uint64 "
+                        "fingerprints")
+    return strs
+
+
+# -- builders ---------------------------------------------------------------
+# Imported lazily inside each builder so `core.api` stays importable from
+# the class modules themselves (they import SpaceBudget/Filter for typing).
+
+@register_filter("habf")
+def _build_habf(pos, neg, costs, *, space, seed, **kw):
+    from .habf import HABF
+    return HABF.build(pos, neg, costs, space=space, seed=seed, **kw)
+
+
+@register_filter("fhabf")
+def _build_fhabf(pos, neg, costs, *, space, seed, **kw):
+    from .habf import HABF
+    kw.setdefault("fast", True)
+    return HABF.build(pos, neg, costs, space=space, seed=seed, **kw)
+
+
+@register_filter("bloom")
+def _build_bloom(pos, neg, costs, *, space, seed, **kw):
+    from .bloom import BloomFilter
+    return BloomFilter.build(pos, neg, costs, space=space, seed=seed, **kw)
+
+
+@register_filter("bloom-double")
+def _build_bloom_double(pos, neg, costs, *, space, seed, **kw):
+    from .bloom import DoubleHashBloomFilter
+    return DoubleHashBloomFilter.build(pos, neg, costs, space=space,
+                                       seed=seed, **kw)
+
+
+@register_filter("xor")
+def _build_xor(pos, neg, costs, *, space, seed, **kw):
+    from .xor_filter import XorFilter
+    return XorFilter.build(pos, neg, costs, space=space, seed=seed, **kw)
+
+
+@register_filter("wbf")
+def _build_wbf(pos, neg, costs, *, space, seed, **kw):
+    from .wbf import WeightedBloomFilter
+    return WeightedBloomFilter.build(pos, neg, costs, space=space, seed=seed,
+                                     **kw)
+
+
+@register_filter("lbf")
+def _build_lbf(pos, neg, costs, *, space, seed, **kw):
+    from .learned import build_lbf
+    pos_strs = _require_strs("lbf", pos)
+    neg_strs = _require_strs("lbf", neg)
+    return build_lbf(pos_strs, as_u64_keys(pos), neg_strs, as_u64_keys(neg),
+                     space.total_bytes, seed=seed, **kw)
+
+
+@register_filter("slbf")
+def _build_slbf(pos, neg, costs, *, space, seed, **kw):
+    from .learned import build_lbf
+    pos_strs = _require_strs("slbf", pos)
+    neg_strs = _require_strs("slbf", neg)
+    return build_lbf(pos_strs, as_u64_keys(pos), neg_strs, as_u64_keys(neg),
+                     space.total_bytes, seed=seed, sandwich=True, **kw)
+
+
+@register_filter("adabf")
+def _build_adabf(pos, neg, costs, *, space, seed, **kw):
+    from .learned import build_adabf
+    pos_strs = _require_strs("adabf", pos)
+    neg_strs = _require_strs("adabf", neg)
+    return build_adabf(pos_strs, as_u64_keys(pos), neg_strs, as_u64_keys(neg),
+                       space.total_bytes, seed=seed, **kw)

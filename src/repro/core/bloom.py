@@ -8,9 +8,12 @@ filter is the special case where every key uses the same H0.
 from __future__ import annotations
 
 import math
+import warnings
+
 import numpy as np
 
 from . import hashing
+from .api import SpaceBudget
 
 
 class BitVector:
@@ -55,6 +58,27 @@ class BloomFilter:
                          if hash_idx is None else np.asarray(hash_idx, np.int64))
         assert len(self.hash_idx) == self.k
 
+    # -- unified construction ----------------------------------------------
+    @classmethod
+    def build(cls, pos_keys, neg_keys=None, costs=None, *,
+              space: SpaceBudget | int, seed: int = 0,
+              k: int | None = None) -> "BloomFilter":
+        """Unified `Filter` build: size from the space budget, k optimal for
+        the resulting bits/key unless given.  neg_keys/costs are accepted
+        for signature uniformity and ignored (BF is cost-oblivious)."""
+        if not isinstance(space, SpaceBudget):
+            space = SpaceBudget(int(space))
+        pos = hashing.as_u64_keys(pos_keys)
+        if k is None:
+            # cap at the global family size (tiny key sets would otherwise
+            # ask for more hash functions than |H|)
+            k = min(optimal_k(space.bits_per_key(len(pos))),
+                    len(hashing.FAMILY["c1"]))
+        bf = cls(space.total_bits, k)
+        if len(pos):
+            bf.insert(pos)
+        return bf
+
     # -- vectorized index computation -------------------------------------
     def key_bits(self, keys_u64: np.ndarray,
                  phi: np.ndarray | None = None) -> np.ndarray:
@@ -69,16 +93,29 @@ class BloomFilter:
         return idx
 
     # -- operations --------------------------------------------------------
-    def insert(self, keys_u64: np.ndarray, phi: np.ndarray | None = None) -> None:
-        self.bits.set_bits(self.key_bits(keys_u64, phi))
+    def insert(self, keys, phi: np.ndarray | None = None) -> None:
+        self.bits.set_bits(self.key_bits(hashing.as_u64_keys(keys), phi))
 
-    def query(self, keys_u64: np.ndarray, phi: np.ndarray | None = None) -> np.ndarray:
+    def query(self, keys, phi: np.ndarray | None = None) -> np.ndarray:
         """Vectorized membership test -> bool (n,)."""
-        idx = self.key_bits(keys_u64, phi)
+        idx = self.key_bits(hashing.as_u64_keys(keys), phi)
         return self.bits.test_bits(idx).all(axis=-1)
 
     # -- device export -------------------------------------------------------
+    def to_artifact(self):
+        """Typed pytree artifact for `repro.kernels.query` (per-H0-index
+        constants pre-gathered; static shape/meta in aux_data)."""
+        from ..kernels.artifacts import BloomArtifact
+        idx = self.hash_idx
+        return BloomArtifact.from_arrays(
+            words=self.bits.words, c1=self.family["c1"][idx],
+            c2=self.family["c2"][idx], mul=self.family["mul"][idx],
+            m=self.bits.m, k=self.k, double_hash=False)
+
     def device_tables(self) -> dict:
+        """Deprecated: use `to_artifact()` — kept as a one-release shim."""
+        warnings.warn("BloomFilter.device_tables() is deprecated; use "
+                      "to_artifact()", DeprecationWarning, stacklevel=2)
         return {
             "words": self.bits.words.copy(),
             "m": self.bits.m,
@@ -92,6 +129,11 @@ class BloomFilter:
     def size_bytes(self) -> int:
         return self.bits.words.nbytes
 
+    def summary(self) -> dict:
+        return {"filter": type(self).__name__, "m_bits": self.bits.m,
+                "k": self.k, "bits_set": self.bits.count(),
+                "size_bytes": self.size_bytes}
+
 
 class DoubleHashBloomFilter(BloomFilter):
     """f-HABF / Kirsch–Mitzenmacher double-hashing variant: g_i = h_a + i*h_b.
@@ -102,3 +144,13 @@ class DoubleHashBloomFilter(BloomFilter):
         idx = self.hash_idx[None, :] if phi is None else np.asarray(phi)
         hv = hashing.double_hash_value_np(keys_u64[:, None], idx, self.family)
         return hashing.fastrange_np(hv, self.bits.m)
+
+    def to_artifact(self):
+        """Double hashing needs only the two base mixers; `double_hash=True`
+        in the artifact's static meta makes the dispatch explicit (no
+        class-name sniffing downstream)."""
+        from ..kernels.artifacts import BloomArtifact
+        return BloomArtifact.from_arrays(
+            words=self.bits.words, c1=self.family["c1"][:2],
+            c2=self.family["c2"][:2], mul=self.family["mul"][:2],
+            m=self.bits.m, k=self.k, double_hash=True)

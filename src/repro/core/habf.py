@@ -18,11 +18,13 @@ alpha = 1 + ceil(log2(n_hash + 1)) bits.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
 from . import hashing
+from .api import SpaceBudget
 from .tpjo import build_tpjo, TPJOResult
 
 
@@ -50,7 +52,7 @@ class HABFConfig:
 
 class HABF:
     """Build with `HABF.build(...)`, query with `.query(keys)` (host) or
-    export `.device_tables()` for the jnp/Pallas query path."""
+    export `.to_artifact()` for the jnp/Pallas query path."""
 
     def __init__(self, result: TPJOResult, config: HABFConfig):
         self.bf = result.bf
@@ -63,29 +65,52 @@ class HABF:
 
     # ------------------------------------------------------------------
     @classmethod
-    def build(cls, pos_keys: np.ndarray, neg_keys: np.ndarray,
+    def build(cls, pos_keys, neg_keys=None,
               neg_costs: np.ndarray | None = None,
-              config: HABFConfig | None = None, **overrides) -> "HABF":
+              config: HABFConfig | None = None, *,
+              space: SpaceBudget | int | None = None, **overrides) -> "HABF":
+        """Build via TPJO.  `space=` (SpaceBudget or bytes) is the unified
+        `Filter` spelling of total_bytes; neg_keys may be None (no observed
+        negative stream — TPJO degenerates to a plain optimal BF + empty
+        HashExpressor, still zero-FNR)."""
+        if space is not None:
+            if isinstance(space, SpaceBudget):
+                space = space.total_bytes
+            overrides.setdefault("total_bytes", int(space))
         config = config or HABFConfig(**overrides)
+        pos = hashing.as_u64_keys(pos_keys)
+        neg = (np.zeros((0,), np.uint64) if neg_keys is None
+               else hashing.as_u64_keys(neg_keys))
         m_bits, omega = config.split()
-        result = build_tpjo(pos_keys, neg_keys, neg_costs, m_bits, omega,
+        result = build_tpjo(pos, neg, neg_costs, m_bits, omega,
                             config.k, n_hash=config.n_hash, seed=config.seed,
                             fast=config.fast)
         return cls(result, config)
 
     # ------------------------------------------------------------------
-    def query(self, keys_u64: np.ndarray) -> np.ndarray:
+    def query(self, keys) -> np.ndarray:
         """Two-round membership test, vectorized on host.  -> bool (n,)."""
-        keys = np.asarray(keys_u64, np.uint64).reshape(-1)
+        keys = hashing.as_u64_keys(keys)
         round1 = self.bf.query(keys)                       # H0
         phi, valid = self.hx.query(keys)
         round2 = self.bf.query(keys, phi=phi)
         return round1 | (valid & round2)
 
     # ------------------------------------------------------------------
+    def to_artifact(self):
+        """Typed pytree artifact for the fused two-round device query."""
+        from ..kernels.artifacts import HABFArtifact
+        return HABFArtifact.from_filter(self)
+
     def device_tables(self) -> dict:
-        t = self.bf.device_tables()
-        t.update({f"hx_{k}": v for k, v in self.hx.device_tables().items()})
+        """Deprecated: use `to_artifact()` — kept as a one-release shim."""
+        warnings.warn("HABF.device_tables() is deprecated; use "
+                      "to_artifact()", DeprecationWarning, stacklevel=2)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            t = self.bf.device_tables()
+            t.update({f"hx_{k}": v
+                      for k, v in self.hx.device_tables().items()})
         return t
 
     @property

@@ -168,6 +168,43 @@ _FNV_OFFSET = np.uint64(0xCBF29CE484222325)
 _FNV_PRIME = np.uint64(0x100000001B3)
 
 
+def as_u64_keys(keys) -> np.ndarray:
+    """Normalize a key batch to (n,) uint64 fingerprints.
+
+    Accepts an integer ndarray (any int dtype, reinterpreted as uint64), a
+    list/tuple of str/bytes (FNV-1a fingerprinted), or a single str/bytes.
+    This is the one key-normalization point shared by every `Filter`
+    implementation, so host and device paths agree on key identity.
+    """
+    if isinstance(keys, np.ndarray):
+        if keys.dtype.kind in "USO":      # string/bytes/object ndarray
+            return fingerprint_bytes(list(keys.reshape(-1)))
+        return keys.astype(np.uint64, copy=False).reshape(-1)
+    if isinstance(keys, (str, bytes)):
+        return fingerprint_bytes([keys])
+    keys = list(keys)
+    if keys and isinstance(keys[0], (str, bytes)):
+        return fingerprint_bytes(keys)
+    return np.asarray(keys, np.uint64).reshape(-1)
+
+
+def as_str_keys(keys):
+    """Return the string form of a key batch, or None if keys are already
+    fingerprints (learned filters need the raw strings to featurize)."""
+    if isinstance(keys, np.ndarray):
+        if keys.dtype.kind in "USO":
+            keys = list(keys.reshape(-1))
+        else:
+            return None
+    elif isinstance(keys, (str, bytes)):
+        return [keys]
+    keys = list(keys)
+    # an empty batch is a valid (empty) string batch
+    if not keys or isinstance(keys[0], (str, bytes)):
+        return keys
+    return None
+
+
 def fingerprint_bytes(keys: list) -> np.ndarray:
     """Vectorized FNV-1a(64) over a list of bytes/str.  One column pass per
     byte position — O(max_len) vector ops instead of a Python loop per key."""

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import hashing
 from .bloom import BloomFilter
 from ..optimizer.adamw import AdamW
 
@@ -146,6 +147,9 @@ def train_classifier(pos_strs, neg_strs, model: str = "mlp", seed: int = 0,
             out.append(np.asarray(jax.nn.sigmoid(apply_j(params, mat[i:i + 65536]))))
         return np.concatenate(out) if out else np.zeros((0,), np.float32)
 
+    # expose the trained weights so filters can export device artifacts
+    score_fn.params = params
+    score_fn.model_kind = model
     return score_fn, _model_bytes(params)
 
 
@@ -163,6 +167,18 @@ def _bf_for(keys_u64, budget_bytes, k_cap=16) -> BloomFilter:
     return bf
 
 
+def _norm_learned_keys(keys, keys_u64):
+    """Accept the unified query(keys) form (strings, fingerprinted here)
+    or the legacy query(strs, keys_u64) two-argument form."""
+    if keys_u64 is not None:
+        return list(keys), np.asarray(keys_u64, np.uint64)
+    strs = hashing.as_str_keys(keys)
+    if strs is None:
+        raise TypeError("learned filters need string keys to featurize; "
+                        "pass the raw strings, not uint64 fingerprints")
+    return strs, hashing.as_u64_keys(strs)
+
+
 @dataclass
 class LearnedBloomFilter:
     score_fn: object
@@ -171,8 +187,8 @@ class LearnedBloomFilter:
     model_bytes: int
     pre: BloomFilter | None = None  # SLBF initial filter
 
-    def query(self, strs, keys_u64) -> np.ndarray:
-        keys = np.asarray(keys_u64, np.uint64)
+    def query(self, keys, keys_u64=None) -> np.ndarray:
+        strs, keys = _norm_learned_keys(keys, keys_u64)
         res = np.ones(len(keys), bool)
         if self.pre is not None:
             res &= self.pre.query(keys)
@@ -187,6 +203,21 @@ class LearnedBloomFilter:
         if self.pre is not None:
             b += self.pre.size_bytes
         return b
+
+    def summary(self) -> dict:
+        return {"filter": "SLBF" if self.pre is not None else "LBF",
+                "model_kind": getattr(self.score_fn, "model_kind", "?"),
+                "model_bytes": self.model_bytes, "tau": float(self.tau),
+                "backup_m_bits": self.backup.bits.m,
+                "size_bytes": self.size_bytes}
+
+    def to_artifact(self):
+        from ..kernels.artifacts import LearnedArtifact
+        return LearnedArtifact.from_arrays(
+            params=self.score_fn.params,
+            backup=self.backup.to_artifact(),
+            pre=None if self.pre is None else self.pre.to_artifact(),
+            model_kind=self.score_fn.model_kind, tau=float(self.tau))
 
 
 def _choose_tau(pos_scores, neg_scores, backup_bytes):
@@ -227,7 +258,7 @@ def build_lbf(pos_strs, pos_u64, neg_strs, neg_u64, total_bytes,
 @dataclass
 class AdaBF:
     score_fn: object
-    taus: np.ndarray          # bucket edges (descending score)
+    taus: np.ndarray          # bucket edges (descending score), float32
     ks: np.ndarray            # hashes per bucket
     bf: BloomFilter
     model_bytes: int
@@ -236,8 +267,8 @@ class AdaBF:
         bucket = np.searchsorted(self.taus, scores)          # 0..g
         return self.ks[bucket]
 
-    def query(self, strs, keys_u64) -> np.ndarray:
-        keys = np.asarray(keys_u64, np.uint64)
+    def query(self, keys, keys_u64=None) -> np.ndarray:
+        strs, keys = _norm_learned_keys(keys, keys_u64)
         ks = self._k_of(self.score_fn(strs))
         bits = self.bf.bits.test_bits(self.bf.key_bits(keys))
         mask = np.arange(self.bf.k)[None, :] < ks[:, None]
@@ -247,6 +278,21 @@ class AdaBF:
     def size_bytes(self) -> float:
         return self.model_bytes + self.bf.size_bytes
 
+    def summary(self) -> dict:
+        return {"filter": "AdaBF",
+                "model_kind": getattr(self.score_fn, "model_kind", "?"),
+                "model_bytes": self.model_bytes,
+                "groups": len(self.ks), "m_bits": self.bf.bits.m,
+                "size_bytes": self.size_bytes}
+
+    def to_artifact(self):
+        from ..kernels.artifacts import AdaBFArtifact
+        return AdaBFArtifact.from_arrays(
+            params=self.score_fn.params, bf=self.bf.to_artifact(),
+            taus=np.asarray(self.taus, np.float32),
+            ks=np.asarray(self.ks, np.int32),
+            model_kind=self.score_fn.model_kind)
+
 
 def build_adabf(pos_strs, pos_u64, neg_strs, neg_u64, total_bytes,
                 groups=4, k_max=8, model="mlp", seed=0) -> AdaBF:
@@ -255,7 +301,9 @@ def build_adabf(pos_strs, pos_u64, neg_strs, neg_u64, total_bytes,
     budget = max(64, total_bytes - mbytes)
     neg_scores = score_fn(neg_strs)
     qs = np.quantile(neg_scores, np.linspace(0.5, 0.98, groups - 1))
-    taus = np.sort(np.unique(qs))
+    # float32 so the host bucket lookup agrees bit-exactly with the device
+    # artifact path (scores are float32 on both sides)
+    taus = np.sort(np.unique(qs.astype(np.float32)))
     ks = np.linspace(k_max, 1, len(taus) + 1).round().astype(np.int64)
     bf = BloomFilter(max(64, budget * 8), k_max)
     pos_scores = score_fn(pos_strs)

@@ -11,7 +11,19 @@ from __future__ import annotations
 
 import numpy as np
 
-from .bloom import BloomFilter
+from . import hashing
+from .api import SpaceBudget
+from .bloom import BloomFilter, optimal_k
+
+
+def ks_for_costs(costs: np.ndarray, k_bar: int, k_max: int) -> np.ndarray:
+    """Per-key hash counts from per-key costs (Bruck et al. Eq. above).
+    Shared by the host filter and the device artifact path so the two can
+    never diverge on the formula."""
+    c = np.maximum(np.asarray(costs, np.float64), 1e-12)
+    geo = np.exp(np.mean(np.log(c)))
+    k = np.round(k_bar + np.log2(c / geo)).astype(np.int64)
+    return np.clip(k, 1, k_max)
 
 
 class WeightedBloomFilter:
@@ -22,35 +34,65 @@ class WeightedBloomFilter:
         self.k_max = int(k_max)
         self.cache_fraction = float(cache_fraction)
         self.k_cache: dict[int, int] = {}
+        # probe count for uncached keys: min(k_bar, min inserted k_e) — a
+        # key inserted with k_e hashes sets bits 0..k_e-1, so probing any
+        # prefix of that keeps the zero-FNR contract even for low-cost
+        # keys that fell out of the cache (at some FPR cost)
+        self.k_fallback = self.k_bar
+
+    # -- unified construction -----------------------------------------------
+    @classmethod
+    def build(cls, pos_keys, neg_keys=None, costs=None, *,
+              space: SpaceBudget | int, seed: int = 0,
+              pos_costs: np.ndarray | None = None, k_bar: int | None = None,
+              k_max: int = 8) -> "WeightedBloomFilter":
+        """Unified `Filter` build.  WBF weights *insertions*: per-positive
+        costs come in via `pos_costs` (the `costs` argument is the
+        per-negative FP cost shared across the registry and is ignored
+        here; neg_keys likewise)."""
+        if not isinstance(space, SpaceBudget):
+            space = SpaceBudget(int(space))
+        pos = hashing.as_u64_keys(pos_keys)
+        n_hash = len(hashing.FAMILY["c1"])
+        if k_bar is None:
+            k_bar = min(optimal_k(space.bits_per_key(len(pos))), n_hash)
+        wbf = cls(space.total_bits, k_bar=k_bar,
+                  k_max=min(max(k_max, k_bar), n_hash))
+        wbf.insert(pos, pos_costs)
+        return wbf
 
     def _k_for(self, costs: np.ndarray) -> np.ndarray:
-        c = np.maximum(np.asarray(costs, np.float64), 1e-12)
-        geo = np.exp(np.mean(np.log(c)))
-        k = np.round(self.k_bar + np.log2(c / geo)).astype(np.int64)
-        return np.clip(k, 1, self.k_max)
+        return ks_for_costs(costs, self.k_bar, self.k_max)
 
-    def build(self, pos_keys: np.ndarray, pos_costs: np.ndarray | None) -> None:
-        keys = np.asarray(pos_keys, np.uint64)
+    def insert(self, pos_keys, pos_costs: np.ndarray | None = None) -> None:
+        keys = hashing.as_u64_keys(pos_keys)
         costs = (np.ones(len(keys)) if pos_costs is None
                  else np.asarray(pos_costs, np.float64))
         ks = self._k_for(costs)
         bits = self.bf.key_bits(keys)                  # (n, k_max)
         mask = np.arange(self.k_max)[None, :] < ks[:, None]
         self.bf.bits.set_bits(bits[mask])
+        if len(ks):
+            self.k_fallback = min(self.k_fallback, int(ks.min()))
         # cache k for the most expensive keys (query-side retrieval)
         n_cache = int(len(keys) * self.cache_fraction)
         if n_cache:
             top = np.argsort(-costs, kind="stable")[:n_cache]
             self.k_cache = {int(keys[i]): int(ks[i]) for i in top}
 
-    def query(self, keys_u64: np.ndarray,
-              costs: np.ndarray | None = None) -> np.ndarray:
-        keys = np.asarray(keys_u64, np.uint64).reshape(-1)
+    def query_ks(self, keys_u64: np.ndarray,
+                 costs: np.ndarray | None = None) -> np.ndarray:
+        """Per-key hash counts used at query time: from costs if given,
+        else the top-cost cache with the zero-FNR fallback.  Shared by the
+        host query and the device `query_keys` path so the two agree."""
         if costs is not None:
-            ks = self._k_for(costs)
-        else:
-            ks = np.asarray([self.k_cache.get(int(x), self.k_bar) for x in keys],
-                            np.int64)
+            return self._k_for(costs)
+        return np.asarray([self.k_cache.get(int(x), self.k_fallback)
+                           for x in keys_u64], np.int64)
+
+    def query(self, keys, costs: np.ndarray | None = None) -> np.ndarray:
+        keys = hashing.as_u64_keys(keys)
+        ks = self.query_ks(keys, costs)
         bits_set = self.bf.bits.test_bits(self.bf.key_bits(keys))  # (n, k_max)
         mask = np.arange(self.k_max)[None, :] < ks[:, None]
         return (bits_set | ~mask).all(axis=1)
@@ -58,3 +100,25 @@ class WeightedBloomFilter:
     @property
     def size_bytes(self) -> float:
         return self.bf.size_bytes
+
+    def summary(self) -> dict:
+        return {"filter": "WeightedBloomFilter", "m_bits": self.bf.bits.m,
+                "k_bar": self.k_bar, "k_max": self.k_max,
+                "k_fallback": self.k_fallback,
+                "n_cached_ks": len(self.k_cache),
+                "size_bytes": self.size_bytes}
+
+    def to_artifact(self):
+        """Pytree artifact: the k_max-probe table plus the k-cache as
+        (sorted key halves, k) leaf arrays so the device wrapper can
+        reproduce the host's cached-k lookup."""
+        from ..kernels.artifacts import WBFArtifact
+        fam, idx = self.bf.family, self.bf.hash_idx
+        ck = np.sort(np.asarray(list(self.k_cache), np.uint64))
+        cv = np.asarray([self.k_cache[int(x)] for x in ck], np.int32)
+        lo, hi = hashing.split_u64(ck)
+        return WBFArtifact.from_arrays(
+            words=self.bf.bits.words, c1=fam["c1"][idx], c2=fam["c2"][idx],
+            mul=fam["mul"][idx], cache_lo=lo, cache_hi=hi, cache_k=cv,
+            m=self.bf.bits.m, k_bar=self.k_bar, k_max=self.k_max,
+            k_fallback=self.k_fallback)

@@ -10,15 +10,17 @@ from __future__ import annotations
 import numpy as np
 
 from . import hashing
+from .api import SpaceBudget
 
 _FP_FAMILY = hashing.make_family(4, seed=0x0F0F)
+_SALT_STEP = 0x9E3779B97F4A7C15
 
 
 def _slots(keys: np.ndarray, seg_len: int, seed_round: int) -> np.ndarray:
     """(n, 3) slot indices, one per segment third."""
     out = np.empty((len(keys), 3), np.int64)
     for j in range(3):
-        hv = hashing.hash_value_np(keys ^ np.uint64(seed_round * 0x9E3779B97F4A7C15
+        hv = hashing.hash_value_np(keys ^ np.uint64(seed_round * _SALT_STEP
                                                     & 0xFFFFFFFFFFFFFFFF),
                                    j, _FP_FAMILY)
         out[:, j] = hashing.fastrange_np(hv, seg_len) + j * seg_len
@@ -32,9 +34,9 @@ def _fingerprint(keys: np.ndarray, bits: int) -> np.ndarray:
 
 
 class XorFilter:
-    def __init__(self, keys_u64: np.ndarray, fingerprint_bits: int = 8,
+    def __init__(self, keys_u64, fingerprint_bits: int = 8,
                  max_rounds: int = 64):
-        keys = np.unique(np.asarray(keys_u64, np.uint64))
+        keys = np.unique(hashing.as_u64_keys(keys_u64))
         self.fp_bits = int(max(1, min(fingerprint_bits, 32)))
         n = max(1, len(keys))
         seg = int(np.ceil(1.23 * n / 3)) + 11
@@ -92,9 +94,24 @@ class XorFilter:
             return rnd
         raise RuntimeError("xor filter peeling failed after max_rounds")
 
+    # -- unified construction -----------------------------------------------
+    @classmethod
+    def build(cls, pos_keys, neg_keys=None, costs=None, *,
+              space: SpaceBudget | int, seed: int = 0,
+              fingerprint_bits: int | None = None) -> "XorFilter":
+        """Unified `Filter` build (static structure: neg/costs/seed are
+        accepted for signature uniformity and ignored).  Fingerprint bits
+        default to the paper's space-fill formula (§V-A)."""
+        if not isinstance(space, SpaceBudget):
+            space = SpaceBudget(int(space))
+        if fingerprint_bits is not None:
+            return cls(pos_keys, fingerprint_bits=fingerprint_bits)
+        return xor_filter_for_space(hashing.as_u64_keys(pos_keys),
+                                    space.total_bytes)
+
     # -- query ------------------------------------------------------------------
-    def query(self, keys_u64: np.ndarray) -> np.ndarray:
-        keys = np.asarray(keys_u64, np.uint64).reshape(-1)
+    def query(self, keys) -> np.ndarray:
+        keys = hashing.as_u64_keys(keys)
         slots = _slots(keys, self.seg_len, self.seed_round)
         fp = _fingerprint(keys, self.fp_bits)
         got = (self.table[slots[:, 0]] ^ self.table[slots[:, 1]]
@@ -104,6 +121,18 @@ class XorFilter:
     @property
     def size_bytes(self) -> float:
         return self.table.shape[0] * self.fp_bits / 8.0
+
+    def summary(self) -> dict:
+        return {"filter": "XorFilter", "fp_bits": self.fp_bits,
+                "seg_len": self.seg_len, "seed_round": self.seed_round,
+                "size_bytes": self.size_bytes}
+
+    def to_artifact(self):
+        from ..kernels.artifacts import XorArtifact
+        return XorArtifact.from_arrays(
+            table=self.table, c1=_FP_FAMILY["c1"], c2=_FP_FAMILY["c2"],
+            mul=_FP_FAMILY["mul"], seg_len=self.seg_len, fp_bits=self.fp_bits,
+            seed_round=self.seed_round)
 
 
 def xor_filter_for_space(keys_u64: np.ndarray, total_bytes: int) -> XorFilter:

@@ -22,8 +22,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..core.api import Filter, SpaceBudget, make_filter
 from ..core.hashing import hash_value_np, fastrange_np
-from ..core.habf import HABF
 
 
 def _doc_tokens(doc_ids: np.ndarray, seq_len: int, vocab: int) -> np.ndarray:
@@ -58,7 +58,7 @@ class PipelineConfig:
 class DataPipeline:
     """Deterministic, resumable, dedup-filtered token stream."""
 
-    def __init__(self, cfg: PipelineConfig, dedup: HABF | None = None,
+    def __init__(self, cfg: PipelineConfig, dedup: Filter | None = None,
                  start_step: int = 0):
         self.cfg = cfg
         self.dedup = dedup
@@ -127,14 +127,18 @@ class DataPipeline:
 
     @classmethod
     def from_state(cls, cfg: PipelineConfig, state: dict,
-                   dedup: HABF | None = None) -> "DataPipeline":
+                   dedup: Filter | None = None) -> "DataPipeline":
         return cls(cfg, dedup=dedup, start_step=state["step"])
 
 
 def build_dedup_filter(known_dup_ids: np.ndarray, clean_sample_ids: np.ndarray,
-                       total_bytes: int = 1 << 20, seed: int = 0) -> HABF:
-    """HABF over document fingerprints; cost of a clean doc = its length
-    proxy (uniform here; hook for length-weighted costs)."""
+                       total_bytes: int = 1 << 20, seed: int = 0,
+                       kind: str = "habf") -> Filter:
+    """Dedup gate over document fingerprints; any registered filter works
+    (HABF default: zero FNR on known duplicates, cost-weighted FPs).  Cost
+    of a clean doc = its length proxy (uniform here; hook for
+    length-weighted costs)."""
     pos = doc_fingerprints(np.asarray(known_dup_ids, np.uint64))
     neg = doc_fingerprints(np.asarray(clean_sample_ids, np.uint64))
-    return HABF.build(pos, neg, None, total_bytes=total_bytes, k=3, seed=seed)
+    return make_filter(kind, pos, neg, space=SpaceBudget(total_bytes),
+                       seed=seed)

@@ -1,8 +1,24 @@
 """Pallas TPU kernels for the HABF hot paths (validated in interpret mode
-on CPU; see each kernel's ref.py for the pure-jnp oracle)."""
+on CPU; see each kernel's ref.py for the pure-jnp oracle).
+
+Public surface: typed pytree artifacts (`artifacts`) + the single
+dispatching entrypoint `query` / host convenience `query_keys`.  The old
+`*_u64` helpers and `device_tables` remain as deprecation shims.
+"""
+from .artifacts import (AdaBFArtifact, BloomArtifact, HABFArtifact,
+                        LearnedArtifact, NgramArtifact, WBFArtifact,
+                        XorArtifact, load_artifact)
+from .dispatch import query, query_keys
 from .bloom_query.ops import bloom_query, bloom_query_u64
 from .habf_query.ops import habf_query, habf_query_u64, device_tables
-from .ngram_blocklist.ops import ngram_blocklist, build_blocklist_bf
+from .ngram_blocklist.ops import (ngram_blocklist, build_blocklist,
+                                  build_blocklist_bf)
 
-__all__ = ["bloom_query", "bloom_query_u64", "habf_query", "habf_query_u64",
-           "device_tables", "ngram_blocklist", "build_blocklist_bf"]
+__all__ = [
+    "query", "query_keys", "load_artifact",
+    "BloomArtifact", "HABFArtifact", "XorArtifact", "WBFArtifact",
+    "LearnedArtifact", "AdaBFArtifact", "NgramArtifact",
+    "bloom_query", "bloom_query_u64", "habf_query", "habf_query_u64",
+    "device_tables", "ngram_blocklist", "build_blocklist",
+    "build_blocklist_bf",
+]

@@ -1,0 +1,268 @@
+"""Typed device artifacts for every filter in the registry.
+
+Each artifact is a frozen dataclass registered as a JAX pytree: array
+tables are leaves, shape/meta (m, k, double_hash, ...) is static aux_data.
+That means an artifact jits, vmaps, `jax.device_put`s with a sharding, and
+closes over into serving steps cleanly — replacing the stringly
+``device_tables()`` dicts and 10+-positional-argument wrappers the seed
+code used.
+
+Artifacts are produced by ``Filter.to_artifact()`` and consumed by the
+single dispatching entrypoint ``repro.kernels.query``.  ``save``/
+``load_artifact`` round-trip any artifact (including nested ones — a
+learned filter holds its backup/pre Bloom artifacts and the classifier
+params) through a single ``.npz`` file for serving hot-swap.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ARTIFACT_KINDS: dict[str, type] = {}
+
+
+def _register(cls, data_fields, meta_fields):
+    jax.tree_util.register_dataclass(cls, data_fields=list(data_fields),
+                                     meta_fields=list(meta_fields))
+    cls._data_fields = tuple(data_fields)
+    cls._meta_fields = tuple(meta_fields)
+    _ARTIFACT_KINDS[cls.__name__] = cls
+    return cls
+
+
+def _dev(x):
+    """Leaf conversion: numpy/jnp array -> jnp; dicts, nested artifacts and
+    None pass through."""
+    if x is None or isinstance(x, (dict, _ArtifactBase)):
+        return x
+    return jnp.asarray(x)
+
+
+class _ArtifactBase:
+    """Shared construction + npz persistence for all artifact kinds."""
+
+    @classmethod
+    def from_arrays(cls, **kw):
+        for f in cls._data_fields:
+            v = kw[f]
+            kw[f] = ({k: jnp.asarray(a) for k, a in v.items()}
+                     if isinstance(v, dict) else _dev(v))
+        return cls(**kw)
+
+    def meta(self) -> dict:
+        return {f: getattr(self, f) for f in self._meta_fields}
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path) -> None:
+        arrays: dict[str, np.ndarray] = {}
+        spec = _pack(self, "", arrays)
+        np.savez(path, __spec__=np.frombuffer(
+            json.dumps(spec).encode(), np.uint8), **arrays)
+
+    def __eq__(self, other):
+        if type(self) is not type(other):
+            return NotImplemented
+        if self.meta() != other.meta():
+            return False
+        sl = jax.tree_util.tree_leaves(self)
+        ol = jax.tree_util.tree_leaves(other)
+        return (len(sl) == len(ol)
+                and all(a.shape == b.shape and a.dtype == b.dtype
+                        and bool(jnp.array_equal(a, b))
+                        for a, b in zip(sl, ol)))
+
+
+def _pack(obj, prefix: str, arrays: dict) -> dict:
+    if obj is None:
+        return {"type": "none"}
+    if isinstance(obj, _ArtifactBase):
+        fields = {}
+        for f in obj._data_fields:
+            fields[f] = _pack(getattr(obj, f), f"{prefix}{f}.", arrays)
+        return {"type": "artifact", "kind": type(obj).__name__,
+                "meta": obj.meta(), "fields": fields}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            arrays[f"{prefix}{k}"] = np.asarray(v)
+        return {"type": "dict", "keys": sorted(obj)}
+    arrays[prefix.rstrip(".")] = np.asarray(obj)
+    return {"type": "array"}
+
+
+def _unpack(spec: dict, prefix: str, arrays) -> object:
+    t = spec["type"]
+    if t == "none":
+        return None
+    if t == "array":
+        return jnp.asarray(arrays[prefix.rstrip(".")])
+    if t == "dict":
+        return {k: jnp.asarray(arrays[f"{prefix}{k}"]) for k in spec["keys"]}
+    cls = _ARTIFACT_KINDS[spec["kind"]]
+    kw = dict(spec["meta"])
+    for f, sub in spec["fields"].items():
+        kw[f] = _unpack(sub, f"{prefix}{f}.", arrays)
+    return cls(**kw)
+
+
+def load_artifact(path):
+    """Load any artifact previously written by ``Artifact.save``."""
+    with np.load(path) as z:
+        spec = json.loads(bytes(z["__spec__"]).decode())
+        return _unpack(spec, "", z)
+
+
+# ---------------------------------------------------------------------------
+# artifact kinds
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True, eq=False)
+class BloomArtifact(_ArtifactBase):
+    """k-probe Bloom table.  For ``double_hash`` only the two base mixers
+    are carried (rows 0/1); otherwise constants are pre-gathered per H0
+    index so the kernel never indexes the global family."""
+    words: jnp.ndarray          # (W,) uint32 word-packed bits
+    c1: jnp.ndarray             # (k,) uint32  ((2,) when double_hash)
+    c2: jnp.ndarray
+    mul: jnp.ndarray
+    m: int                      # static: number of bits
+    k: int                      # static: probes per key
+    double_hash: bool = False   # static: Kirsch–Mitzenmacher g_i = h_a+i*h_b
+
+
+_register(BloomArtifact, ["words", "c1", "c2", "mul"],
+          ["m", "k", "double_hash"])
+
+
+@dataclass(frozen=True, eq=False)
+class HABFArtifact(_ArtifactBase):
+    """Fused two-round HABF query state: Bloom words + HashExpressor cell
+    arrays + the full hash family (the walk gathers by stored index)."""
+    words: jnp.ndarray          # (W,) uint32
+    hx_hashidx: jnp.ndarray     # (omega,) int32, 0 = empty cell
+    hx_endbit: jnp.ndarray      # (omega,) int32
+    c1: jnp.ndarray             # (n_hash,) uint32 global family
+    c2: jnp.ndarray
+    mul: jnp.ndarray
+    f_consts: jnp.ndarray       # (3, 1) uint32 — unified hash f of the walk
+    h0_idx: jnp.ndarray         # (k,) int32 round-1 hash indices
+    m: int                      # static
+    omega: int                  # static
+    k: int                      # static
+    double_hash: bool = False   # static (f-HABF)
+
+    @classmethod
+    def from_filter(cls, habf) -> "HABFArtifact":
+        from ..core.hash_expressor import F_FAMILY
+        bf, hx = habf.bf, habf.hx
+        fam = bf.family
+        f_consts = np.stack([F_FAMILY["c1"], F_FAMILY["c2"], F_FAMILY["mul"]])
+        return cls.from_arrays(
+            words=bf.bits.words, hx_hashidx=hx.hashidx.astype(np.int32),
+            hx_endbit=hx.endbit.astype(np.int32), c1=fam["c1"], c2=fam["c2"],
+            mul=fam["mul"], f_consts=f_consts,
+            h0_idx=bf.hash_idx.astype(np.int32), m=bf.bits.m, omega=hx.omega,
+            k=hx.k, double_hash=hx.double_hash)
+
+
+_register(HABFArtifact,
+          ["words", "hx_hashidx", "hx_endbit", "c1", "c2", "mul",
+           "f_consts", "h0_idx"],
+          ["m", "omega", "k", "double_hash"])
+
+
+@dataclass(frozen=True, eq=False)
+class XorArtifact(_ArtifactBase):
+    """Xor filter table + the 4-function fingerprint family (3 slot
+    hashes + 1 fingerprint hash); the per-round key salt is derived from
+    the static ``seed_round``."""
+    table: jnp.ndarray          # (3 * seg_len,) uint32 fingerprints
+    c1: jnp.ndarray             # (4,) uint32
+    c2: jnp.ndarray
+    mul: jnp.ndarray
+    seg_len: int                # static
+    fp_bits: int                # static
+    seed_round: int             # static
+
+
+_register(XorArtifact, ["table", "c1", "c2", "mul"],
+          ["seg_len", "fp_bits", "seed_round"])
+
+
+@dataclass(frozen=True, eq=False)
+class WBFArtifact(_ArtifactBase):
+    """Weighted-Bloom table (k_max probe constants) + the top-cost k-cache
+    as sorted leaf arrays so query wrappers can reproduce the host's
+    cached-k lookup without the host dict."""
+    words: jnp.ndarray          # (W,) uint32
+    c1: jnp.ndarray             # (k_max,) uint32
+    c2: jnp.ndarray
+    mul: jnp.ndarray
+    cache_lo: jnp.ndarray       # (n_cache,) uint32, sorted by full u64 key
+    cache_hi: jnp.ndarray
+    cache_k: jnp.ndarray        # (n_cache,) int32
+    m: int                      # static
+    k_bar: int                  # static: nominal probe count
+    k_max: int                  # static
+    k_fallback: int             # static: uncached-key probes (zero-FNR floor)
+
+
+_register(WBFArtifact,
+          ["words", "c1", "c2", "mul", "cache_lo", "cache_hi", "cache_k"],
+          ["m", "k_bar", "k_max", "k_fallback"])
+
+
+@dataclass(frozen=True, eq=False)
+class LearnedArtifact(_ArtifactBase):
+    """LBF / SLBF: classifier params + threshold + backup (and optional
+    pre) Bloom artifacts.  Queries additionally need the byte-encoded key
+    strings (``bytes_mat``) to featurize."""
+    params: dict                # classifier weights (dict of arrays)
+    backup: BloomArtifact
+    pre: BloomArtifact | None   # SLBF initial filter
+    model_kind: str             # static: "mlp" | "gru"
+    tau: float                  # static decision threshold
+
+
+_register(LearnedArtifact, ["params", "backup", "pre"],
+          ["model_kind", "tau"])
+
+
+@dataclass(frozen=True, eq=False)
+class AdaBFArtifact(_ArtifactBase):
+    """Ada-BF: classifier params + score-bucket edges/hash counts over a
+    single Bloom table."""
+    params: dict
+    bf: BloomArtifact
+    taus: jnp.ndarray           # (g-1,) float32 bucket edges
+    ks: jnp.ndarray             # (g,) int32 hashes per bucket
+    model_kind: str             # static
+
+
+_register(AdaBFArtifact, ["params", "bf", "taus", "ks"], ["model_kind"])
+
+
+@dataclass(frozen=True, eq=False)
+class NgramArtifact(_ArtifactBase):
+    """Token n-gram blocklist: Bloom table + pre-gathered probe constants
+    + the static n-gram order.  Queried with a (B, T) token batch."""
+    words: jnp.ndarray          # (W,) uint32
+    c1: jnp.ndarray             # (k,) uint32
+    c2: jnp.ndarray
+    mul: jnp.ndarray
+    m: int                      # static
+    k: int                      # static
+    n: int                      # static n-gram length
+
+    @classmethod
+    def from_filter(cls, bf, n: int) -> "NgramArtifact":
+        fam, idx = bf.family, bf.hash_idx
+        return cls.from_arrays(words=bf.bits.words, c1=fam["c1"][idx],
+                               c2=fam["c2"][idx], mul=fam["mul"][idx],
+                               m=bf.bits.m, k=bf.k, n=n)
+
+
+_register(NgramArtifact, ["words", "c1", "c2", "mul"], ["m", "k", "n"])

@@ -1,13 +1,17 @@
-"""jit'd public wrapper for the Bloom-query kernel."""
+"""jit'd public wrapper for the Bloom-query kernel.
+
+The positional `bloom_query` stays as the low-level jit surface; typed
+callers should go through `repro.kernels.query(BloomArtifact, ...)`.
+"""
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core import hashing
 from .kernel import bloom_query_pallas
 from .ref import bloom_query_ref
 
@@ -26,16 +30,13 @@ def bloom_query(key_lo, key_hi, words, c1, c2, mul, *, m: int, k: int,
 
 
 def bloom_query_u64(bf, keys_u64: np.ndarray, use_kernel: bool = True):
-    """Convenience: query a host-side BloomFilter object on device."""
-    t = bf.device_tables()
-    lo, hi = hashing.split_u64(keys_u64)
-    fam_idx = t["hash_idx"]
-    dh = bf.__class__.__name__.startswith("DoubleHash")
-    c1 = t["c1"] if dh else t["c1"][fam_idx]
-    c2 = t["c2"] if dh else t["c2"][fam_idx]
-    mul = t["mul"] if dh else t["mul"][fam_idx]
-    return bloom_query(jnp.asarray(lo), jnp.asarray(hi),
-                       jnp.asarray(t["words"]), jnp.asarray(c1),
-                       jnp.asarray(c2), jnp.asarray(mul),
-                       m=t["m"], k=len(fam_idx), double_hash=dh,
-                       use_kernel=use_kernel)
+    """Deprecated shim: use `repro.kernels.query_keys(bf, keys)`.
+
+    Dispatch on double hashing now rides the artifact's static
+    `double_hash` field instead of class-name sniffing.
+    """
+    warnings.warn("bloom_query_u64 is deprecated; use "
+                  "repro.kernels.query_keys(filter, keys)",
+                  DeprecationWarning, stacklevel=2)
+    from ..dispatch import query_keys
+    return query_keys(bf, keys_u64, use_kernel=use_kernel)

@@ -1,0 +1,228 @@
+"""`repro.kernels.query` — the single device-query entrypoint.
+
+Dispatches on the artifact's type (see artifacts.py) instead of threading
+10+ positional arrays into per-kernel wrappers:
+
+    art = filt.to_artifact()              # typed pytree
+    hits = query(art, key_lo, key_hi)     # Pallas kernel or jnp ref
+
+``query_keys(filter_or_artifact, keys)`` is the host-side convenience that
+normalizes raw keys (uint64 fingerprints or strings) into the device
+layout — it replaces the old ``bloom_query_u64`` / ``habf_query_u64``
+helpers, which remain as deprecation shims.
+
+Kernel coverage: Bloom/HABF/ngram artifacts run the Pallas kernels when
+``use_kernel=True``; Xor/WBF/learned artifacts run pure-jnp reference
+paths (portable on any backend) — ``use_kernel`` is accepted and ignored
+for those.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.hashing import as_str_keys, as_u64_keys, split_u64
+from ..core.wbf import ks_for_costs
+from ..core.xor_filter import _SALT_STEP as _XOR_SALT_STEP
+from . import common
+from .artifacts import (AdaBFArtifact, BloomArtifact, HABFArtifact,
+                        LearnedArtifact, NgramArtifact, WBFArtifact,
+                        XorArtifact, _ArtifactBase)
+from .bloom_query.ops import bloom_query
+from .bloom_query.ref import bloom_query_ref
+from .habf_query.ops import habf_query
+from .ngram_blocklist.ops import ngram_blocklist
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp artifact queries (traceable; usable inside larger jitted steps)
+# ---------------------------------------------------------------------------
+
+def bloom_artifact_ref(art: BloomArtifact, key_lo, key_hi):
+    """Traceable Bloom probe over an artifact -> bool (n,)."""
+    return bloom_query_ref(key_lo, key_hi, art.words, art.c1, art.c2,
+                           art.mul, art.m, art.k, double_hash=art.double_hash)
+
+
+def habf_artifact_ref(art: HABFArtifact, key_lo, key_hi):
+    """Traceable fused two-round HABF query over an artifact -> bool (n,)."""
+    from .habf_query.ref import habf_query_ref
+    return habf_query_ref(key_lo, key_hi, art.words, art.hx_hashidx,
+                          art.hx_endbit, art.c1, art.c2, art.mul,
+                          art.f_consts[0], art.f_consts[1], art.f_consts[2],
+                          art.h0_idx, art.m, art.omega, art.k,
+                          double_hash=art.double_hash)
+
+
+def xor_artifact_ref(art: XorArtifact, key_lo, key_hi):
+    """Traceable Xor-filter query (3 slot gathers + fingerprint compare)."""
+    salt = (art.seed_round * _XOR_SALT_STEP) & 0xFFFFFFFFFFFFFFFF
+    slo = jnp.uint32(salt & 0xFFFFFFFF)
+    shi = jnp.uint32(salt >> 32)
+    got = jnp.zeros(key_lo.shape, jnp.uint32)
+    for j in range(3):
+        hv = common.hash_value(key_lo ^ slo, key_hi ^ shi,
+                               art.c1[j], art.c2[j], art.mul[j])
+        slot = common.fastrange(hv, art.seg_len) + j * art.seg_len
+        got = got ^ jnp.take(art.table, slot, axis=0, mode="clip")
+    fp = common.hash_value(key_lo, key_hi, art.c1[3], art.c2[3], art.mul[3])
+    fp = jnp.maximum(fp & jnp.uint32((1 << art.fp_bits) - 1), jnp.uint32(1))
+    return got == fp
+
+
+def wbf_artifact_ref(art: WBFArtifact, key_lo, key_hi, ks):
+    """Traceable WBF query: probe all k_max bits, mask by per-key ks."""
+    out = jnp.ones(key_lo.shape, jnp.bool_)
+    ks = ks.astype(jnp.int32)
+    for j in range(art.k_max):
+        hv = common.hash_value(key_lo, key_hi, art.c1[j], art.c2[j],
+                               art.mul[j])
+        bit = common.probe_bits(art.words, common.fastrange(hv, art.m)) == 1
+        out = out & (bit | (j >= ks))
+    return out
+
+
+def learned_artifact_ref(art: LearnedArtifact, scores, key_lo, key_hi):
+    """Traceable LBF/SLBF decision given classifier scores."""
+    res = jnp.ones(key_lo.shape, jnp.bool_)
+    if art.pre is not None:
+        res = res & bloom_artifact_ref(art.pre, key_lo, key_hi)
+    backup = bloom_artifact_ref(art.backup, key_lo, key_hi)
+    return res & ((scores >= art.tau) | backup)
+
+
+def adabf_artifact_ref(art: AdaBFArtifact, scores, key_lo, key_hi):
+    """Traceable Ada-BF decision: score bucket -> hash count -> probes."""
+    ks = art.ks[jnp.searchsorted(art.taus, scores)].astype(jnp.int32)
+    out = jnp.ones(key_lo.shape, jnp.bool_)
+    for j in range(art.bf.k):
+        hv = common.hash_value(key_lo, key_hi, art.bf.c1[j], art.bf.c2[j],
+                               art.bf.mul[j])
+        bit = common.probe_bits(art.bf.words,
+                                common.fastrange(hv, art.bf.m)) == 1
+        out = out & (bit | (j >= ks))
+    return out
+
+
+_xor_jit = jax.jit(xor_artifact_ref)
+_wbf_jit = jax.jit(wbf_artifact_ref)
+_learned_jit = jax.jit(learned_artifact_ref)
+_adabf_jit = jax.jit(adabf_artifact_ref)
+
+_APPLY_JIT: dict[str, object] = {}
+
+
+def classifier_scores(model_kind: str, params, bytes_mat):
+    """Classifier scores for learned artifacts, chunked exactly like the
+    host `score_fn` so host and device decisions agree bit-for-bit."""
+    from ..core import learned
+    if model_kind not in _APPLY_JIT:
+        apply = learned.apply_mlp if model_kind == "mlp" else learned.apply_gru
+        _APPLY_JIT[model_kind] = jax.jit(apply)
+    apply_j = _APPLY_JIT[model_kind]
+    out = []
+    for i in range(0, len(bytes_mat), 65536):
+        out.append(jax.nn.sigmoid(apply_j(params, bytes_mat[i:i + 65536])))
+    return (jnp.concatenate(out) if out else jnp.zeros((0,), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# the entrypoint
+# ---------------------------------------------------------------------------
+
+def query(artifact, key_lo, key_hi=None, *, use_kernel: bool = True,
+          interpret: bool | None = None, ks=None, bytes_mat=None):
+    """Unified device membership query -> bool array.
+
+    * Bloom/HABF/WBF/Xor/learned artifacts take ``key_lo``/``key_hi``
+      (n,)-shaped uint32 key halves (see ``hashing.split_u64``).
+    * ``NgramArtifact`` takes a (B, T) int32 token batch as the first
+      array argument and flags the trailing n-gram at every position.
+    * WBF takes optional per-key hash counts ``ks`` (defaults to k_bar).
+    * Learned artifacts need ``bytes_mat`` (``learned.encode_keys`` of the
+      raw strings) to featurize; use ``query_keys`` to get this for free.
+    """
+    if getattr(key_lo, "size", 1) == 0:
+        # empty batch: nothing to probe (the Pallas grid can't be empty)
+        return jnp.zeros(getattr(key_lo, "shape", (0,)), jnp.bool_)
+    if isinstance(artifact, BloomArtifact):
+        return bloom_query(key_lo, key_hi, artifact.words, artifact.c1,
+                           artifact.c2, artifact.mul, m=artifact.m,
+                           k=artifact.k, double_hash=artifact.double_hash,
+                           use_kernel=use_kernel, interpret=interpret)
+    if isinstance(artifact, HABFArtifact):
+        return habf_query(key_lo, key_hi, artifact.words,
+                          artifact.hx_hashidx, artifact.hx_endbit,
+                          artifact.c1, artifact.c2, artifact.mul,
+                          artifact.f_consts, artifact.h0_idx, m=artifact.m,
+                          omega=artifact.omega, k=artifact.k,
+                          double_hash=artifact.double_hash,
+                          use_kernel=use_kernel, interpret=interpret)
+    if isinstance(artifact, NgramArtifact):
+        if key_hi is not None:
+            raise TypeError("NgramArtifact queries take a (B, T) token "
+                            "batch as the only array argument")
+        return ngram_blocklist(key_lo, artifact.words, artifact.c1,
+                               artifact.c2, artifact.mul, m=artifact.m,
+                               k=artifact.k, n=artifact.n,
+                               use_kernel=use_kernel, interpret=interpret)
+    if isinstance(artifact, XorArtifact):
+        return _xor_jit(artifact, key_lo, key_hi)
+    if isinstance(artifact, WBFArtifact):
+        if ks is None:
+            ks = jnp.full(key_lo.shape, artifact.k_fallback, jnp.int32)
+        return _wbf_jit(artifact, key_lo, key_hi, jnp.asarray(ks))
+    if isinstance(artifact, (LearnedArtifact, AdaBFArtifact)):
+        if bytes_mat is None:
+            raise ValueError("learned artifacts need bytes_mat= (the "
+                             "byte-encoded key strings); see query_keys")
+        scores = classifier_scores(artifact.model_kind, artifact.params,
+                                   bytes_mat)
+        if isinstance(artifact, LearnedArtifact):
+            return _learned_jit(artifact, scores, key_lo, key_hi)
+        return _adabf_jit(artifact, scores, key_lo, key_hi)
+    raise TypeError(f"not a filter artifact: {type(artifact).__name__}")
+
+
+def _wbf_cached_ks(art: WBFArtifact, keys_u64: np.ndarray) -> np.ndarray:
+    """Host-side reproduction of the WBF cached-k lookup from the
+    artifact's sorted cache arrays."""
+    cache = ((np.asarray(art.cache_hi, np.uint64) << np.uint64(32))
+             | np.asarray(art.cache_lo, np.uint64))
+    ck = np.asarray(art.cache_k, np.int64)
+    if len(cache) == 0:
+        return np.full(keys_u64.shape, art.k_fallback, np.int64)
+    pos = np.minimum(np.searchsorted(cache, keys_u64), len(cache) - 1)
+    found = cache[pos] == keys_u64
+    return np.where(found, ck[pos], art.k_fallback)
+
+
+def query_keys(obj, keys, *, use_kernel: bool = True,
+               interpret: bool | None = None, costs=None):
+    """Query a filter (or its artifact) on device from raw host keys.
+
+    ``keys`` may be uint64 fingerprints or raw strings (required for
+    learned filters).  ``costs`` optionally supplies per-key costs for the
+    WBF query-side k recovery, mirroring ``WeightedBloomFilter.query``.
+    """
+    if not isinstance(obj, _ArtifactBase):
+        obj = obj.to_artifact()
+    if isinstance(obj, NgramArtifact):
+        raise TypeError("n-gram blocklists are queried with a token batch: "
+                        "query(artifact, tokens)")
+    u64 = as_u64_keys(keys)
+    lo, hi = split_u64(u64)
+    kw: dict = {}
+    if isinstance(obj, WBFArtifact):
+        ks = (ks_for_costs(costs, obj.k_bar, obj.k_max)
+              if costs is not None else _wbf_cached_ks(obj, u64))
+        kw["ks"] = jnp.asarray(ks, jnp.int32)
+    if isinstance(obj, (LearnedArtifact, AdaBFArtifact)):
+        from ..core.learned import encode_keys
+        strs = as_str_keys(keys)
+        if strs is None:
+            raise TypeError("learned filters need string keys to featurize")
+        kw["bytes_mat"] = encode_keys(strs)
+    return query(obj, jnp.asarray(lo), jnp.asarray(hi),
+                 use_kernel=use_kernel, interpret=interpret, **kw)

@@ -1,13 +1,17 @@
-"""jit'd public wrapper for the fused HABF two-round query."""
+"""jit'd public wrapper for the fused HABF two-round query.
+
+The positional `habf_query` stays as the low-level jit surface; typed
+callers should go through `repro.kernels.query(HABFArtifact, ...)`.
+"""
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core import hashing
 from .kernel import habf_query_pallas
 from .ref import habf_query_ref
 
@@ -29,29 +33,21 @@ def habf_query(key_lo, key_hi, words, hx_hashidx, hx_endbit, c1, c2, mul,
 
 
 def device_tables(habf) -> dict:
-    """Flatten an HABF object into jit-ready device arrays."""
-    bf_t = habf.bf.device_tables()
-    hx_t = habf.hx.device_tables()
-    f_consts = jnp.stack([jnp.asarray(hx_t["f_c1"]), jnp.asarray(hx_t["f_c2"]),
-                          jnp.asarray(hx_t["f_mul"])])  # (3, 1) uint32
-    return dict(
-        words=jnp.asarray(bf_t["words"]),
-        hx_hashidx=jnp.asarray(hx_t["hashidx"]),
-        hx_endbit=jnp.asarray(hx_t["endbit"]),
-        c1=jnp.asarray(bf_t["c1"]), c2=jnp.asarray(bf_t["c2"]),
-        mul=jnp.asarray(bf_t["mul"]), f_consts=f_consts,
-        h0_idx=jnp.asarray(bf_t["hash_idx"], jnp.int32),
-        m=bf_t["m"], omega=hx_t["omega"], k=hx_t["k"],
-        double_hash=bool(hx_t["double_hash"]),
-    )
+    """Deprecated shim: use `habf.to_artifact()` (typed pytree) instead of
+    a stringly dict."""
+    warnings.warn("kernels.habf_query.device_tables is deprecated; use "
+                  "habf.to_artifact()", DeprecationWarning, stacklevel=2)
+    a = habf.to_artifact()
+    return dict(words=a.words, hx_hashidx=a.hx_hashidx,
+                hx_endbit=a.hx_endbit, c1=a.c1, c2=a.c2, mul=a.mul,
+                f_consts=a.f_consts, h0_idx=a.h0_idx, m=a.m, omega=a.omega,
+                k=a.k, double_hash=a.double_hash)
 
 
 def habf_query_u64(habf, keys_u64: np.ndarray, use_kernel: bool = True):
-    """Query a host-built HABF on device; mirrors HABF.query()."""
-    t = device_tables(habf)
-    lo, hi = hashing.split_u64(keys_u64)
-    return habf_query(jnp.asarray(lo), jnp.asarray(hi), t["words"],
-                      t["hx_hashidx"], t["hx_endbit"], t["c1"], t["c2"],
-                      t["mul"], t["f_consts"], t["h0_idx"], m=t["m"],
-                      omega=t["omega"], k=t["k"],
-                      double_hash=t["double_hash"], use_kernel=use_kernel)
+    """Deprecated shim: use `repro.kernels.query_keys(habf, keys)`."""
+    warnings.warn("habf_query_u64 is deprecated; use "
+                  "repro.kernels.query_keys(filter, keys)",
+                  DeprecationWarning, stacklevel=2)
+    from ..dispatch import query_keys
+    return query_keys(habf, keys_u64, use_kernel=use_kernel)

@@ -34,3 +34,13 @@ def build_blocklist_bf(ngrams: np.ndarray, m_bits: int, k: int):
     bf = BloomFilter(m_bits, k)
     bf.insert(fp)
     return bf
+
+
+def build_blocklist(ngrams: np.ndarray, m_bits: int, k: int):
+    """Build the typed device artifact for an n-gram blocklist; query it
+    with `repro.kernels.query(artifact, tokens)`."""
+    from ..artifacts import NgramArtifact
+
+    ngrams = np.asarray(ngrams)
+    bf = build_blocklist_bf(ngrams, m_bits, k)
+    return NgramArtifact.from_filter(bf, n=int(ngrams.shape[1]))

@@ -63,12 +63,12 @@ def runnable(arch: str, shape: str) -> bool:
 def _build_gate_blocklist():
     """2 MB Bloom blocklist (paper-default size) for the fused decode gate."""
     import numpy as np
-    from ..runtime.serve_loop import blocklist_tables
+    from ..kernels.artifacts import NgramArtifact
     from ..core.bloom import BloomFilter
     rng = np.random.default_rng(0)
     bf = BloomFilter(2 * 1024 * 1024 * 8, k=3)
     bf.insert(rng.integers(0, 1 << 63, 100_000).astype(np.uint64))
-    return blocklist_tables(bf)
+    return NgramArtifact.from_filter(bf, n=4)
 
 
 def tree_bytes(tree) -> int:
@@ -141,9 +141,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
                 # fuse the paper's filters into the lowered decode step:
                 # n-gram blocklist probe + (replicated, VMEM-scale) tables
                 bl = _build_gate_blocklist()
-                step = make_decode_step(model, blocklist=bl, ngram_n=4)
+                step = make_decode_step(model, blocklist=bl)
                 B = specs["tokens"].shape[0]
-                win = jax.ShapeDtypeStruct((B, 4), jnp.int32)
+                win = jax.ShapeDtypeStruct((B, bl.n), jnp.int32)
                 win_sh = sh.spec_for(mesh, sh.DEFAULT_RULES, ("batch", None),
                                      shape=win.shape)
                 jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh,
@@ -178,6 +178,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
                 if v is not None:
                     rec[attr] = int(v)
         ca = compiled.cost_analysis()
+        # jax API drift: cost_analysis() used to return a list of one dict
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
         print(f"  cost_analysis: flops={ca.get('flops')} "
               f"bytes={ca.get('bytes accessed')}", flush=True)
         if ca:

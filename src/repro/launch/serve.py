@@ -22,12 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
-from ..core import BloomFilter, HABF, optimal_k, weighted_fpr
+from ..core import SpaceBudget, make_filter, weighted_fpr
 from ..core.hashing import fingerprint_bytes
-from ..kernels.ngram_blocklist.ops import build_blocklist_bf
+from ..kernels.ngram_blocklist.ops import build_blocklist
 from ..models.model import Model
 from ..runtime.serve_loop import (make_prefill_step, make_decode_step,
-                                  habf_gate_tables, blocklist_tables,
                                   admission_probe)
 
 
@@ -38,10 +37,10 @@ def build_admission_filter(n_cached: int = 5000, n_missing: int = 5000,
     cached = fingerprint_bytes([f"prefix-cached-{i}" for i in range(n_cached)])
     missing = fingerprint_bytes([f"prefix-miss-{i}" for i in range(n_missing)])
     lengths = rng.zipf(2.0, n_missing).clip(1, 32_768).astype(np.float64)
-    habf = HABF.build(cached, missing, lengths, total_bytes=total_bytes,
-                      k=3, seed=seed)
-    bf = BloomFilter(total_bytes * 8, k=optimal_k(total_bytes * 8 / n_cached))
-    bf.insert(cached)
+    space = SpaceBudget(total_bytes)
+    habf = make_filter("habf", cached, missing, lengths, space=space,
+                       seed=seed, k=3)
+    bf = make_filter("bloom", cached, space=space)
     stats = {
         "habf_weighted_fpr": weighted_fpr(habf.query(missing), lengths),
         "bf_weighted_fpr": weighted_fpr(bf.query(missing), lengths),
@@ -59,13 +58,12 @@ def run(arch: str = "qwen3-0.6b", reduced: bool = True, batch: int = 8,
     rng = np.random.default_rng(seed)
 
     habf, cached, missing, lengths, fstats = build_admission_filter(seed=seed)
-    tables = habf_gate_tables(habf) if habf_gate else None
+    gate = habf.to_artifact() if habf_gate else None
 
-    bl_tables = None
+    bl_art = None
     if blocklist:
         grams = rng.integers(0, cfg.vocab, (64, 4)).astype(np.int32)
-        bl = build_blocklist_bf(grams, 1 << 14, k=3)
-        bl_tables = blocklist_tables(bl)
+        bl_art = build_blocklist(grams, 1 << 14, k=3)
 
     n_img = cfg.n_img_tokens if cfg.family == "vlm" else 0
     total_len = prompt_len + n_img + gen + 1
@@ -85,8 +83,8 @@ def run(arch: str = "qwen3-0.6b", reduced: bool = True, batch: int = 8,
         prompt["prefix_lo"] = jnp.asarray(mix & 0xFFFFFFFF, jnp.uint32)
         prompt["prefix_hi"] = jnp.asarray(mix >> np.uint64(32), jnp.uint32)
 
-    prefill = jax.jit(make_prefill_step(model, habf_tables=tables))
-    decode = jax.jit(make_decode_step(model, blocklist=bl_tables))
+    prefill = jax.jit(make_prefill_step(model, admission=gate))
+    decode = jax.jit(make_decode_step(model, blocklist=bl_art))
 
     t0 = time.time()
     out, cache = prefill(params, prompt, cache)

@@ -26,9 +26,11 @@ from jax.experimental.shard_map import shard_map
 def ef_quantize_reduce(grads, error, axis_names=("data",)):
     """Inside-shard_map body: error-feedback int8 all-reduce (mean).
     grads/error: local pytrees.  Returns (reduced_grads, new_error)."""
+    # jax.lax.axis_size was removed; psum of 1 over the axis is the
+    # supported way to read a mapped axis' size inside shard_map
     n = 1
     for ax in axis_names:
-        n *= jax.lax.axis_size(ax)
+        n *= jax.lax.psum(1, ax)
 
     def one(g, e):
         g32 = g.astype(jnp.float32) + e

@@ -10,56 +10,46 @@ integrated as a first-class admission/blocklist gate (DESIGN.md §2).
   * decode: optional fused n-gram blocklist probe on the trailing window
     of emitted tokens.
 
-Both gates are pure functions of replicated filter tables (a few MB,
-VMEM-resident on TPU) and add no cross-device communication.
+Both gates take typed pytree artifacts (`HABFArtifact` / `NgramArtifact`,
+see repro.kernels.artifacts): a few MB of replicated, VMEM-resident filter
+tables that close over into the jitted steps — and, being pytrees, can be
+`jax.device_put` with a sharding, donated, or hot-swapped from an npz.
 """
 from __future__ import annotations
 
-from typing import Any
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from ..kernels.habf_query.ref import habf_query_ref
+from ..kernels.artifacts import HABFArtifact, NgramArtifact
+from ..kernels.dispatch import habf_artifact_ref
 from ..kernels.ngram_blocklist.ref import ngram_fingerprints
 from ..kernels.common import probe_bits, hash_value, fastrange
 from ..models.model import Model
 
 
-def habf_gate_tables(habf) -> dict:
-    """Replicated device arrays for the fused admission probe."""
-    from ..kernels.habf_query.ops import device_tables
-    return device_tables(habf)
+def admission_probe(gate: HABFArtifact, prefix_lo, prefix_hi):
+    """Traceable two-round HABF probe; usable inside jitted steps."""
+    return habf_artifact_ref(gate, prefix_lo, prefix_hi)
 
 
-def admission_probe(tables: dict, prefix_lo, prefix_hi):
-    return habf_query_ref(
-        prefix_lo, prefix_hi, tables["words"],
-        tables["hx_hashidx"].astype(jnp.int32),
-        tables["hx_endbit"].astype(jnp.int32),
-        tables["c1"], tables["c2"], tables["mul"],
-        tables["f_consts"][0], tables["f_consts"][1], tables["f_consts"][2],
-        tables["h0_idx"], m=tables["m"], omega=tables["omega"],
-        k=tables["k"], double_hash=tables["double_hash"])
-
-
-def make_prefill_step(model: Model, habf_tables: dict | None = None):
+def make_prefill_step(model: Model, admission: HABFArtifact | None = None):
     def prefill_step(params, batch, cache):
         logits, cache = model.prefill(params, batch, cache)
         out = {"next_token": jnp.argmax(logits, axis=-1).astype(jnp.int32)}
-        if habf_tables is not None:
-            out["admit"] = admission_probe(habf_tables, batch["prefix_lo"],
+        if admission is not None:
+            out["admit"] = admission_probe(admission, batch["prefix_lo"],
                                            batch["prefix_hi"])
         return out, cache
 
     return prefill_step
 
 
-def make_decode_step(model: Model, blocklist: dict | None = None,
-                     ngram_n: int = 4):
+def make_decode_step(model: Model, blocklist: NgramArtifact | None = None):
     """decode_step(params, tokens, cache, pos[, last_window]) -> out, cache.
-    last_window: (B, ngram_n) trailing tokens incl. the new one, for the
-    fused blocklist probe."""
+    last_window: (B, blocklist.n) trailing tokens incl. the new one, for
+    the fused blocklist probe."""
 
     def decode_step(params, tokens, cache, pos, last_window=None):
         logits, cache = model.decode(params, tokens, cache, pos)
@@ -67,13 +57,13 @@ def make_decode_step(model: Model, blocklist: dict | None = None,
         out = {"next_token": nxt}
         if blocklist is not None and last_window is not None:
             win = jnp.concatenate([last_window[:, 1:], nxt[:, None]], axis=1)
-            lo, hi = ngram_fingerprints(win, win.shape[1])
+            lo, hi = ngram_fingerprints(win, blocklist.n)
             acc = jnp.ones(lo[:, -1].shape, jnp.uint32)
-            for j in range(blocklist["k"]):
-                hv = hash_value(lo[:, -1], hi[:, -1], blocklist["c1"][j],
-                                blocklist["c2"][j], blocklist["mul"][j])
-                acc = acc & probe_bits(blocklist["words"],
-                                       fastrange(hv, blocklist["m"]))
+            for j in range(blocklist.k):
+                hv = hash_value(lo[:, -1], hi[:, -1], blocklist.c1[j],
+                                blocklist.c2[j], blocklist.mul[j])
+                acc = acc & probe_bits(blocklist.words,
+                                       fastrange(hv, blocklist.m))
             out["blocked"] = acc.astype(jnp.bool_)
             out["window"] = win
         return out, cache
@@ -81,12 +71,22 @@ def make_decode_step(model: Model, blocklist: dict | None = None,
     return decode_step
 
 
-def blocklist_tables(bf) -> dict:
-    t = bf.device_tables()
-    idx = t["hash_idx"]
-    return {"words": jnp.asarray(t["words"]), "m": t["m"], "k": len(idx),
-            "c1": jnp.asarray(t["c1"][idx]), "c2": jnp.asarray(t["c2"][idx]),
-            "mul": jnp.asarray(t["mul"][idx])}
+# -- deprecated table builders (artifact-era shims) -------------------------
+
+def habf_gate_tables(habf) -> HABFArtifact:
+    """Deprecated: use `habf.to_artifact()`."""
+    warnings.warn("habf_gate_tables is deprecated; use habf.to_artifact()",
+                  DeprecationWarning, stacklevel=2)
+    return habf.to_artifact()
+
+
+def blocklist_tables(bf, n: int = 4) -> NgramArtifact:
+    """Deprecated: use `NgramArtifact.from_filter(bf, n)` or
+    `kernels.build_blocklist`."""
+    warnings.warn("blocklist_tables is deprecated; use "
+                  "NgramArtifact.from_filter(bf, n)",
+                  DeprecationWarning, stacklevel=2)
+    return NgramArtifact.from_filter(bf, n)
 
 
 def generate(model: Model, params, prompt_batch: dict, cache, steps: int,

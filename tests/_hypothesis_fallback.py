@@ -1,0 +1,131 @@
+"""Minimal deterministic stand-in for `hypothesis`, used only when the
+real package is not installed (e.g. an offline container).
+
+Covers exactly the API surface this repo's property tests use:
+``given``, ``settings(max_examples=, deadline=)``, and
+``strategies.integers / floats / booleans / lists / sampled_from``.
+Examples are drawn from a per-test seeded PRNG (seeded by the test name),
+so runs are reproducible; the first example pins every strategy to its
+lower bound and the second to its upper bound to keep the cheap edge-case
+coverage real hypothesis would provide.
+
+This is NOT a shrinking property-testing engine — install `hypothesis`
+(declared in pyproject's test extra) to get the real thing; the conftest
+prefers it automatically whenever it is importable.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random, mode: str):
+        return self._draw(rng, mode)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    def draw(rng, mode):
+        if mode == "lo":
+            return min_value
+        if mode == "hi":
+            return max_value
+        return rng.randint(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    def draw(rng, mode):
+        if mode == "lo":
+            return float(min_value)
+        if mode == "hi":
+            return float(max_value)
+        return rng.uniform(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng, mode: {"lo": False, "hi": True}.get(
+        mode, rng.random() < 0.5))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+
+    def draw(rng, mode):
+        if mode == "lo":
+            return seq[0]
+        if mode == "hi":
+            return seq[-1]
+        return seq[rng.randrange(len(seq))]
+
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int | None = None) -> _Strategy:
+    def draw(rng, mode):
+        hi = min_size + 8 if max_size is None else max_size
+        if mode == "lo":
+            n = min_size
+        elif mode == "hi":
+            n = hi
+        else:
+            n = rng.randint(min_size, hi)
+        return [elements.draw(rng, mode) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+class strategies:
+    """Namespace mirror so `from hypothesis import strategies as st` works."""
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    lists = staticmethod(lists)
+    sampled_from = staticmethod(sampled_from)
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            # read at call time so @settings works above OR below @given
+            conf = (getattr(wrapper, "_fallback_settings", None)
+                    or getattr(fn, "_fallback_settings", None)
+                    or {"max_examples": 10})
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            n = conf["max_examples"]
+            for i in range(n):
+                mode = "lo" if i == 0 else ("hi" if i == 1 and n > 1
+                                            else "rand")
+                args = [s.draw(rng, mode) for s in strats]
+                kwargs = {k: s.draw(rng, mode) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (hypothesis-fallback, "
+                        f"example {i}/{n}): args={args!r} kwargs={kwargs!r}"
+                    ) from e
+
+        # pytest follows __wrapped__ when introspecting the signature and
+        # would demand fixtures named after the original parameters
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,0 +1,18 @@
+"""Test bootstrap.
+
+Prefers the real `hypothesis` (declared in pyproject's test extra); in
+offline containers where it is absent, installs the deterministic
+fallback from tests/_hypothesis_fallback.py under the same module name so
+the property-test modules still collect and run.
+"""
+import sys
+from pathlib import Path
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).parent))
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies

@@ -38,7 +38,7 @@ def test_wbf_no_fn_and_cost_sensitivity():
     pos, neg = keys[:15_000], keys[15_000:]
     pos_costs = zipf_costs(len(pos), 1.0, seed=1)
     wbf = WeightedBloomFilter(15_000 * 10, k_bar=5, k_max=10)
-    wbf.build(pos, pos_costs)
+    wbf.insert(pos, pos_costs)
     assert wbf.query(pos, pos_costs).all()
     neg_costs = zipf_costs(len(neg), 1.0, seed=2)
     w = weighted_fpr(wbf.query(neg, neg_costs), neg_costs)

@@ -1,0 +1,218 @@
+"""Unified filter API tests: registry completeness, the Filter protocol,
+pytree artifact round-trips (flatten/unflatten, jit-through, npz
+save/load), and host-vs-device query parity for every registered filter."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (Filter, SpaceBudget, available_filters, make_filter,
+                        zipf_costs)
+from repro.core.datasets import make_shalla
+from repro.kernels import load_artifact, query, query_keys
+
+U64_FILTERS = ("habf", "fhabf", "bloom", "bloom-double", "xor", "wbf")
+LEARNED_FILTERS = ("lbf", "slbf", "adabf")
+
+
+@pytest.fixture(scope="module")
+def keysets():
+    rng = np.random.default_rng(7)
+    keys = rng.choice(np.uint64(1) << np.uint64(62), 8000,
+                      replace=False).astype(np.uint64)
+    pos, neg = keys[:4000], keys[4000:]
+    unseen = rng.integers(1 << 40, 1 << 61, 2000).astype(np.uint64)
+    return pos, neg, unseen
+
+
+@pytest.fixture(scope="module")
+def string_ds():
+    return make_shalla(scale=0.002, seed=3)
+
+
+@pytest.fixture(scope="module")
+def learned_filters(string_ds):
+    ds = string_ds
+    space = SpaceBudget.from_bits_per_key(12, ds.n_pos)
+    return {name: make_filter(name, ds.pos_strs, ds.neg_strs, space=space,
+                              seed=0)
+            for name in LEARNED_FILTERS}
+
+
+def test_registry_lists_every_paper_filter():
+    names = available_filters()
+    for expect in U64_FILTERS + LEARNED_FILTERS:
+        assert expect in names
+    with pytest.raises(KeyError):
+        make_filter("no-such-filter", np.zeros(1, np.uint64), space=64)
+
+
+@pytest.mark.parametrize("name", U64_FILTERS)
+def test_registry_builds_and_zero_fnr(name, keysets):
+    pos, neg, _ = keysets
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    f = make_filter(name, pos, neg, zipf_costs(len(neg), 1.0, 2),
+                    space=space, seed=0)
+    assert isinstance(f, Filter)          # runtime-checkable protocol
+    assert f.query(pos).all(), "false negative on built positives"
+    assert f.query(neg).mean() < 0.2
+    assert f.size_bytes > 0
+    assert isinstance(f.summary(), dict)
+
+
+@pytest.mark.parametrize("name", LEARNED_FILTERS)
+def test_registry_learned_zero_fnr(name, string_ds, learned_filters):
+    ds, f = string_ds, learned_filters[name]
+    assert isinstance(f, Filter)
+    assert f.query(ds.pos_strs).all(), "false negative on built positives"
+    assert f.size_bytes > 0
+    assert isinstance(f.summary(), dict)
+
+
+def test_learned_filters_reject_u64_only_keys(keysets):
+    pos, neg, _ = keysets
+    with pytest.raises(TypeError):
+        make_filter("lbf", pos, neg, space=SpaceBudget(4096))
+
+
+def test_string_keys_accepted_everywhere(string_ds):
+    ds = string_ds
+    space = SpaceBudget.from_bits_per_key(10, ds.n_pos)
+    f = make_filter("habf", ds.pos_strs, ds.neg_strs, space=space, seed=0)
+    # string and fingerprint queries agree
+    np.testing.assert_array_equal(f.query(ds.pos_strs), f.query(ds.pos_u64))
+    assert f.query(ds.pos_strs).all()
+
+
+@pytest.mark.parametrize("name", U64_FILTERS)
+def test_host_device_parity(name, keysets):
+    pos, neg, unseen = keysets
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    f = make_filter(name, pos, neg, zipf_costs(len(neg), 1.0, 2),
+                    space=space, seed=0)
+    for probe in (pos, neg, unseen):
+        host = np.asarray(f.query(probe))
+        dev = np.asarray(query_keys(f, probe))
+        np.testing.assert_array_equal(host, dev)
+
+
+@pytest.mark.parametrize("name", LEARNED_FILTERS)
+def test_host_device_parity_learned(name, string_ds, learned_filters):
+    ds, f = string_ds, learned_filters[name]
+    probe = ds.pos_strs[:500] + ds.neg_strs[:500]
+    host = np.asarray(f.query(probe))
+    dev = np.asarray(query_keys(f, probe))
+    np.testing.assert_array_equal(host, dev)
+
+
+def test_wbf_skewed_pos_costs_keeps_zero_fnr(keysets):
+    # low-cost keys are inserted with k_e < k_bar and fall out of the
+    # cache; the uncached fallback must stay a prefix of every inserted
+    # hash set so the protocol's zero-FNR contract holds without costs
+    pos, neg, _ = keysets
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    f = make_filter("wbf", pos, space=space,
+                    pos_costs=zipf_costs(len(pos), 1.5, 9))
+    assert f.query(pos).all(), "cost-skewed WBF lost zero FNR"
+    host = np.asarray(f.query(neg))
+    np.testing.assert_array_equal(host, np.asarray(query_keys(f, neg)))
+
+
+def test_empty_key_batch_everywhere(string_ds, learned_filters):
+    u64 = np.zeros((0,), np.uint64)
+    space = SpaceBudget(1024)
+    f = make_filter("bloom", np.arange(1, 100, dtype=np.uint64), space=space)
+    assert f.query(u64).shape == (0,)
+    assert np.asarray(query_keys(f, u64)).shape == (0,)
+    lbf = learned_filters["lbf"]
+    assert lbf.query([]).shape == (0,)
+    assert np.asarray(query_keys(lbf, [])).shape == (0,)
+
+
+def test_wbf_query_costs_parity(keysets):
+    pos, neg, _ = keysets
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    f = make_filter("wbf", pos, space=space,
+                    pos_costs=zipf_costs(len(pos), 1.0, 5))
+    qcosts = zipf_costs(len(neg), 1.0, 6)
+    host = np.asarray(f.query(neg, qcosts))
+    dev = np.asarray(query_keys(f, neg, costs=qcosts))
+    np.testing.assert_array_equal(host, dev)
+
+
+# ---------------------------------------------------------------------------
+# artifact pytree mechanics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", U64_FILTERS)
+def test_artifact_pytree_roundtrip(name, keysets):
+    pos, neg, _ = keysets
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    art = make_filter(name, pos, neg, space=space, seed=0).to_artifact()
+    leaves, treedef = jax.tree_util.tree_flatten(art)
+    assert leaves, "artifact must expose its tables as pytree leaves"
+    art2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert art == art2
+    # static meta rides aux_data: scalar-free leaves only
+    assert all(hasattr(l, "shape") for l in leaves)
+
+
+@pytest.mark.parametrize("name", ("habf", "bloom", "bloom-double"))
+def test_artifact_jit_through_and_device_put(name, keysets):
+    pos, neg, unseen = keysets
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    f = make_filter(name, pos, neg, space=space, seed=0)
+    art = jax.device_put(f.to_artifact())
+
+    # an artifact passes through jit boundaries as a normal pytree arg
+    @jax.jit
+    def probe(a, lo, hi):
+        from repro.kernels.dispatch import (bloom_artifact_ref,
+                                            habf_artifact_ref)
+        fn = habf_artifact_ref if name == "habf" else bloom_artifact_ref
+        return fn(a, lo, hi)
+
+    from repro.core.hashing import split_u64
+    lo, hi = split_u64(unseen)
+    out = np.asarray(probe(art, jnp.asarray(lo), jnp.asarray(hi)))
+    np.testing.assert_array_equal(out, np.asarray(f.query(unseen)))
+
+
+@pytest.mark.parametrize("name", U64_FILTERS)
+def test_artifact_npz_save_load(name, keysets, tmp_path):
+    pos, neg, unseen = keysets
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    f = make_filter(name, pos, neg, space=space, seed=0)
+    art = f.to_artifact()
+    p = tmp_path / f"{name}.npz"
+    art.save(p)
+    art2 = load_artifact(p)
+    assert art == art2
+    np.testing.assert_array_equal(np.asarray(query_keys(art2, unseen)),
+                                  np.asarray(f.query(unseen)))
+
+
+def test_learned_artifact_npz_save_load(string_ds, learned_filters,
+                                        tmp_path):
+    ds = string_ds
+    f = learned_filters["slbf"]          # nested: params + backup + pre
+    art = f.to_artifact()
+    p = tmp_path / "slbf.npz"
+    art.save(p)
+    art2 = load_artifact(p)
+    assert art == art2
+    probe = ds.pos_strs[:300] + ds.neg_strs[:300]
+    np.testing.assert_array_equal(np.asarray(query_keys(art2, probe)),
+                                  np.asarray(f.query(probe)))
+
+
+def test_ngram_artifact_query_shape():
+    from repro.kernels import build_blocklist
+    rng = np.random.default_rng(0)
+    grams = rng.integers(0, 1000, (32, 4)).astype(np.int32)
+    art = build_blocklist(grams, 1 << 14, k=3)
+    tokens = rng.integers(0, 1000, (2, 64)).astype(np.int32)
+    out = np.asarray(query(art, jnp.asarray(tokens)))
+    assert out.shape == (2, 64)
+    with pytest.raises(TypeError):
+        query_keys(art, np.zeros(4, np.uint64))

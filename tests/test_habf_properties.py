@@ -66,14 +66,14 @@ def test_hashexpressor_fpr_bound(seed, k):
 def test_device_host_query_agree_everywhere(seed):
     """The jnp two-round query must agree with the host query on positive,
     negative, and never-seen keys (any divergence breaks zero-FNR on TPU)."""
-    from repro.kernels import habf_query_u64
+    from repro.kernels import query_keys
     pos, neg, rng = _sets(seed, 2000)
     h = HABF.build(pos, neg, zipf_costs(len(neg), 1.0, seed),
                    total_bytes=2000 * 10 // 8, k=3, seed=seed)
     unseen = rng.integers(1 << 40, 1 << 61, 4000).astype(np.uint64)
     for keys in (pos, neg, unseen):
         host = h.query(keys)
-        dev = np.asarray(habf_query_u64(h, keys, use_kernel=False))
+        dev = np.asarray(query_keys(h, keys, use_kernel=False))
         np.testing.assert_array_equal(host, dev)
 
 

@@ -1,15 +1,12 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle vs
-host numpy, swept over shapes and table sizes."""
+host numpy, swept over shapes and table sizes — all through the unified
+`kernels.query` / `query_keys` artifact surface."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.core import BloomFilter, DoubleHashBloomFilter, HABF, zipf_costs
-from repro.core import hashing
-from repro.kernels import (bloom_query_u64, habf_query_u64, ngram_blocklist,
-                           build_blocklist_bf)
-from repro.kernels.bloom_query.ops import bloom_query
-from repro.kernels.ngram_blocklist.ref import ngram_blocklist_ref
+from repro.kernels import build_blocklist, query, query_keys
 
 
 def _keys(rng, n):
@@ -25,8 +22,8 @@ def test_bloom_kernel_matches_host(n_keys, m_bits):
     bf.insert(pos)
     probe = np.concatenate([pos[:n_keys // 2], _keys(rng, n_keys - n_keys // 2)])
     host = bf.query(probe)
-    dev = np.asarray(bloom_query_u64(bf, probe, use_kernel=True))
-    ref = np.asarray(bloom_query_u64(bf, probe, use_kernel=False))
+    dev = np.asarray(query_keys(bf, probe, use_kernel=True))
+    ref = np.asarray(query_keys(bf, probe, use_kernel=False))
     np.testing.assert_array_equal(host, dev)
     np.testing.assert_array_equal(host, ref)
 
@@ -39,7 +36,7 @@ def test_bloom_kernel_k_sweep(k):
     bf.insert(pos)
     probe = _keys(rng, 3000)
     np.testing.assert_array_equal(
-        bf.query(probe), np.asarray(bloom_query_u64(bf, probe)))
+        bf.query(probe), np.asarray(query_keys(bf, probe)))
 
 
 def test_bloom_kernel_double_hash():
@@ -48,8 +45,10 @@ def test_bloom_kernel_double_hash():
     bf = DoubleHashBloomFilter(1 << 16, k=4)
     bf.insert(pos)
     probe = np.concatenate([pos, _keys(rng, 2000)])
+    # dispatch rides the artifact's static double_hash flag
+    assert bf.to_artifact().double_hash
     np.testing.assert_array_equal(
-        bf.query(probe), np.asarray(bloom_query_u64(bf, probe)))
+        bf.query(probe), np.asarray(query_keys(bf, probe)))
 
 
 @pytest.mark.parametrize("fast", [False, True])
@@ -63,12 +62,30 @@ def test_habf_kernel_matches_host(fast, k):
                    total_bytes=6000 * 10 // 8, k=k, seed=0, fast=fast)
     probe = np.concatenate([pos[:2000], neg[:3000]])
     host = h.query(probe)
-    dev = np.asarray(habf_query_u64(h, probe, use_kernel=True))
-    ref = np.asarray(habf_query_u64(h, probe, use_kernel=False))
+    dev = np.asarray(query_keys(h, probe, use_kernel=True))
+    ref = np.asarray(query_keys(h, probe, use_kernel=False))
     np.testing.assert_array_equal(host, ref)
     np.testing.assert_array_equal(host, dev)
     # zero FNR holds on-device as well
-    assert np.asarray(habf_query_u64(h, pos)).all()
+    assert np.asarray(query_keys(h, pos)).all()
+
+
+def test_deprecated_u64_shims_still_work():
+    rng = np.random.default_rng(11)
+    pos, neg = _keys(rng, 2000), _keys(rng, 2000)
+    bf = BloomFilter(1 << 15, k=4)
+    bf.insert(pos)
+    h = HABF.build(pos, neg, None, total_bytes=2000 * 10 // 8, k=3, seed=0)
+    from repro.kernels import bloom_query_u64, habf_query_u64, device_tables
+    with pytest.deprecated_call():
+        out = np.asarray(bloom_query_u64(bf, neg))
+    np.testing.assert_array_equal(out, bf.query(neg))
+    with pytest.deprecated_call():
+        out = np.asarray(habf_query_u64(h, neg, use_kernel=False))
+    np.testing.assert_array_equal(out, h.query(neg))
+    with pytest.deprecated_call():
+        t = device_tables(h)
+    assert t["m"] == h.bf.bits.m and t["omega"] == h.hx.omega
 
 
 @pytest.mark.parametrize("B,T,n", [(1, 64, 3), (4, 300, 4), (9, 1024, 5)])
@@ -81,15 +98,10 @@ def test_ngram_kernel_matches_ref(B, T, n):
     present = np.stack([tokens[b, s:s + n] for b, s in zip(rows, starts)])
     n_distinct = len({(int(b), int(s)) for b, s in zip(rows, starts)})
     absent = rng.integers(0, 32000, (50, n)).astype(np.int32)
-    bf = build_blocklist_bf(np.concatenate([present, absent]), 1 << 16, k=4)
-    t = bf.device_tables()
-    args = (jnp.asarray(tokens), jnp.asarray(t["words"]),
-            jnp.asarray(t["c1"][t["hash_idx"]]), jnp.asarray(t["c2"][t["hash_idx"]]),
-            jnp.asarray(t["mul"][t["hash_idx"]]))
-    out_k = np.asarray(ngram_blocklist(*args, m=t["m"], k=4, n=n,
-                                       use_kernel=True))
-    out_r = np.asarray(ngram_blocklist(*args, m=t["m"], k=4, n=n,
-                                       use_kernel=False))
+    art = build_blocklist(np.concatenate([present, absent]), 1 << 16, k=4)
+    assert art.n == n
+    out_k = np.asarray(query(art, jnp.asarray(tokens), use_kernel=True))
+    out_r = np.asarray(query(art, jnp.asarray(tokens), use_kernel=False))
     np.testing.assert_array_equal(out_k, out_r)
     # every inserted present n-gram must be flagged at its end position
     for b, s in zip(rows, starts):
@@ -104,12 +116,8 @@ def test_ngram_no_false_negative_property():
     n = 4
     grams = np.stack([tokens[i, s:s + n] for i in range(2)
                       for s in range(0, 256 - n, 17)])
-    bf = build_blocklist_bf(grams, 1 << 15, k=3)
-    t = bf.device_tables()
-    out = np.asarray(ngram_blocklist(
-        jnp.asarray(tokens), jnp.asarray(t["words"]),
-        jnp.asarray(t["c1"][t["hash_idx"]]), jnp.asarray(t["c2"][t["hash_idx"]]),
-        jnp.asarray(t["mul"][t["hash_idx"]]), m=t["m"], k=3, n=n))
+    art = build_blocklist(grams, 1 << 15, k=3)
+    out = np.asarray(query(art, jnp.asarray(tokens)))
     for i in range(2):
         for s in range(0, 256 - n, 17):
             assert out[i, s + n - 1], f"missed inserted n-gram at {i},{s}"

@@ -9,8 +9,9 @@ from repro.runtime import sharding as sh
 
 
 def _mesh(shape, names):
-    # AbstractMesh: spec resolution is pure metadata (works on 1 device)
-    return AbstractMesh(shape, names)
+    # AbstractMesh: spec resolution is pure metadata (works on 1 device);
+    # jax >= 0.4.36 takes ((name, size), ...) pairs
+    return AbstractMesh(tuple(zip(names, shape)))
 
 
 def test_logical_to_spec_basics():
