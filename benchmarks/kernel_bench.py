@@ -16,20 +16,31 @@ def kernel_throughput(scale=0.01, seed=0, n_query=200_000):
     the number demonstrates correctness plumbing, not TPU performance; the
     jnp ref path is the portable production fallback."""
     import jax
+    from repro.core import zipf_costs
+    from repro.core.wbf import WeightedBloomFilter
+    from repro.core.xor_filter import xor_filter_for_space
     from repro.kernels import query
     from repro.core.hashing import split_u64
     import jax.numpy as jnp
 
     rows = []
     ds = make_dataset("shalla", scale, seed)
+    space_bytes = ds.n_pos * 10 // 8
     h = HABF.build(ds.pos_u64, ds.neg_u64, None,
-                   total_bytes=ds.n_pos * 10 // 8, k=3, seed=seed)
+                   total_bytes=space_bytes, k=3, seed=seed)
+    xf = xor_filter_for_space(ds.pos_u64, space_bytes)
+    wbf = WeightedBloomFilter(space_bytes * 8, k_bar=4)
+    wbf.insert(ds.pos_u64, zipf_costs(ds.n_pos, 1.0, seed))
     rng = np.random.default_rng(seed)
     q = rng.choice(np.concatenate([ds.pos_u64, ds.neg_u64]), n_query)
     lo, hi = split_u64(q)
     lo, hi = jnp.asarray(lo), jnp.asarray(hi)
     habf_art = h.to_artifact()
     bloom_art = h.bf.to_artifact()
+    xor_art = xf.to_artifact()
+    wbf_art = wbf.to_artifact()
+    # skewed per-key probe counts: the variable-k path, not the uniform one
+    ks = jnp.asarray(wbf.query_ks(q), jnp.int32)
 
     def bench(fn, name):
         fn()  # compile/warm
@@ -47,6 +58,13 @@ def kernel_throughput(scale=0.01, seed=0, n_query=200_000):
           "bloom_jnp_ref")
     bench(lambda: query(bloom_art, lo, hi, use_kernel=True),
           "bloom_pallas_interp")
+    bench(lambda: query(xor_art, lo, hi, use_kernel=False), "xor_jnp_ref")
+    bench(lambda: query(xor_art, lo, hi, use_kernel=True),
+          "xor_pallas_interp")
+    bench(lambda: query(wbf_art, lo, hi, ks=ks, use_kernel=False),
+          "wbf_jnp_ref")
+    bench(lambda: query(wbf_art, lo, hi, ks=ks, use_kernel=True),
+          "wbf_pallas_interp")
     return rows
 
 

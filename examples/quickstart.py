@@ -34,7 +34,10 @@ print(f"TPJO: {s['n_optimized']}/{s['n_collision_total']} collision keys "
 
 # 4. the same two-round query on device (Pallas kernel, interpret on CPU):
 #    to_artifact() gives a typed pytree — it jits, vmaps, device_puts, and
-#    save/load round-trips through one npz for serving hot-swap.
+#    save/load round-trips through one npz for serving hot-swap.  Every
+#    artifact type has a kernel path (bloom/habf/ngram/xor/wbf kernels;
+#    adabf rides the wbf kernel, learned filters the bloom kernel), so
+#    query/query_keys honor use_kernel=True for whatever you build here.
 art = habf.to_artifact()
 dev = np.asarray(query_keys(art, ds.neg_u64))
 host = habf.query(ds.neg_u64)

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # One-command local/CI gate: deps + tier-1 tests + a fast interpret-mode
-# kernel parity smoke.
+# kernel parity smoke over every kernel-backed filter.
 #
 #   bash scripts/ci.sh            # everything
 #   bash scripts/ci.sh --no-install
@@ -14,30 +14,68 @@ if [[ "${1:-}" != "--no-install" ]]; then
         || echo "ci.sh: pip install failed (offline?) — using preinstalled deps"
 fi
 
+echo "== deprecation-shim gate (removed surfaces must stay removed) =="
+if grep -rn --include="*.py" "device_tables\|query_u64" src/; then
+    echo "ci.sh: FAIL — deprecation-shim surface resurfaced in src/" >&2
+    exit 1
+fi
+echo "  no shim surfaces in src/"
+
 echo "== tier-1 tests =="
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q
 
 echo "== kernel parity smoke (Pallas interpret vs jnp ref vs host) =="
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
-import numpy as np
-from repro.core import SpaceBudget, make_filter, zipf_costs
-from repro.kernels import query_keys
+import warnings
 
-rng = np.random.default_rng(0)
-keys = rng.choice(np.uint64(1) << np.uint64(62), 12_000,
-                  replace=False).astype(np.uint64)
-pos, neg = keys[:6000], keys[6000:]
-space = SpaceBudget.from_bits_per_key(10, len(pos))
-probe = np.concatenate([pos[:2000], neg[:2000]])
-for name in ("habf", "fhabf", "bloom", "bloom-double"):
-    f = make_filter(name, pos, neg, zipf_costs(len(neg), 1.0, 1),
-                    space=space, seed=0)
-    host = np.asarray(f.query(probe))
-    kern = np.asarray(query_keys(f, probe, use_kernel=True))
-    ref = np.asarray(query_keys(f, probe, use_kernel=False))
-    assert (host == kern).all() and (host == ref).all(), name
-    assert f.query(pos).all(), f"{name}: FNR > 0"
-    print(f"  {name}: kernel==ref==host on {len(probe)} keys; zero FNR")
-print("kernel parity smoke OK")
+# import repro inside the recording block so import-time shim warnings
+# (module-level warn / __getattr__ shims) are caught too
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter("always")
+
+    import numpy as np
+
+    from repro.core import SpaceBudget, make_filter, zipf_costs
+    from repro.kernels import query_keys
+
+    rng = np.random.default_rng(0)
+    keys = rng.choice(np.uint64(1) << np.uint64(62), 12_000,
+                      replace=False).astype(np.uint64)
+    pos, neg = keys[:6000], keys[6000:]
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    probe = np.concatenate([pos[:2000], neg[:2000]])
+    for name in ("habf", "fhabf", "bloom", "bloom-double", "xor", "wbf"):
+        kw = {"pos_costs": zipf_costs(len(pos), 1.5, 9)} if name == "wbf" \
+            else {}
+        f = make_filter(name, pos, neg, zipf_costs(len(neg), 1.0, 1),
+                        space=space, seed=0, **kw)
+        host = np.asarray(f.query(probe))
+        kern = np.asarray(query_keys(f, probe, use_kernel=True))
+        ref = np.asarray(query_keys(f, probe, use_kernel=False))
+        assert (host == kern).all() and (host == ref).all(), name
+        assert f.query(pos).all(), f"{name}: FNR > 0"
+        assert np.asarray(query_keys(f, pos, use_kernel=True)).all(), \
+            f"{name}: device FNR > 0"
+        print(f"  {name}: kernel==ref==host on {len(probe)} keys; zero FNR")
+
+    # WBF query-side cost bucketing rides the same kernel
+    f = make_filter("wbf", pos, space=space,
+                    pos_costs=zipf_costs(len(pos), 1.0, 5))
+    qcosts = zipf_costs(len(neg), 1.0, 6)
+    host = np.asarray(f.query(neg, qcosts))
+    kern = np.asarray(query_keys(f, neg, costs=qcosts, use_kernel=True))
+    assert (host == kern).all(), "wbf costs= parity"
+    print("  wbf costs= bucketing: kernel==host")
+
+# the shims are really gone: no repro code path may emit DeprecationWarning.
+# Match provenance positively: warnings attributed to the repro tree or to
+# this script itself (stacklevel=2 shims would point here) are ours;
+# third-party deprecations from jax/numpy internals are not.
+ours = [w for w in caught if issubclass(w.category, DeprecationWarning)
+        and ("/repro/" in (w.filename or "")
+             or (w.filename or "").startswith("<"))]
+assert not ours, "DeprecationWarning from repro.*: " + \
+    "; ".join(f"{w.filename}:{w.lineno}: {w.message}" for w in ours)
+print("kernel parity smoke OK (and no repro DeprecationWarnings)")
 EOF
 echo "ci.sh: all green"

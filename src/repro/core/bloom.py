@@ -8,7 +8,6 @@ filter is the special case where every key uses the same H0.
 from __future__ import annotations
 
 import math
-import warnings
 
 import numpy as np
 
@@ -111,19 +110,6 @@ class BloomFilter:
             words=self.bits.words, c1=self.family["c1"][idx],
             c2=self.family["c2"][idx], mul=self.family["mul"][idx],
             m=self.bits.m, k=self.k, double_hash=False)
-
-    def device_tables(self) -> dict:
-        """Deprecated: use `to_artifact()` — kept as a one-release shim."""
-        warnings.warn("BloomFilter.device_tables() is deprecated; use "
-                      "to_artifact()", DeprecationWarning, stacklevel=2)
-        return {
-            "words": self.bits.words.copy(),
-            "m": self.bits.m,
-            "hash_idx": self.hash_idx.copy(),
-            "c1": self.family["c1"],
-            "c2": self.family["c2"],
-            "mul": self.family["mul"],
-        }
 
     @property
     def size_bytes(self) -> int:

@@ -18,7 +18,6 @@ alpha = 1 + ceil(log2(n_hash + 1)) bits.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -101,17 +100,6 @@ class HABF:
         """Typed pytree artifact for the fused two-round device query."""
         from ..kernels.artifacts import HABFArtifact
         return HABFArtifact.from_filter(self)
-
-    def device_tables(self) -> dict:
-        """Deprecated: use `to_artifact()` — kept as a one-release shim."""
-        warnings.warn("HABF.device_tables() is deprecated; use "
-                      "to_artifact()", DeprecationWarning, stacklevel=2)
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            t = self.bf.device_tables()
-            t.update({f"hx_{k}": v
-                      for k, v in self.hx.device_tables().items()})
-        return t
 
     @property
     def size_bytes(self) -> float:

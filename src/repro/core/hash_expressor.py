@@ -122,18 +122,6 @@ class HashExpressor:
         # are structurally impossible for inserted keys, keep as-is.
         return phi, valid
 
-    # -- device export --------------------------------------------------------
-    def device_tables(self) -> dict:
-        return {
-            "endbit": self.endbit.copy(),
-            "hashidx": self.hashidx.copy(),
-            "omega": self.omega,
-            "k": self.k,
-            "f_c1": F_FAMILY["c1"], "f_c2": F_FAMILY["c2"], "f_mul": F_FAMILY["mul"],
-            "c1": self.family["c1"], "c2": self.family["c2"], "mul": self.family["mul"],
-            "double_hash": self.double_hash,
-        }
-
     @property
     def size_bytes(self) -> float:
         # alpha = 1 endbit + ceil(log2(n_hash+1)) hashindex bits per cell

@@ -21,6 +21,8 @@ def ks_for_costs(costs: np.ndarray, k_bar: int, k_max: int) -> np.ndarray:
     Shared by the host filter and the device artifact path so the two can
     never diverge on the formula."""
     c = np.maximum(np.asarray(costs, np.float64), 1e-12)
+    if c.size == 0:
+        return np.zeros((0,), np.int64)
     geo = np.exp(np.mean(np.log(c)))
     k = np.round(k_bar + np.log2(c / geo)).astype(np.int64)
     return np.clip(k, 1, k_max)

@@ -2,23 +2,28 @@
 on CPU; see each kernel's ref.py for the pure-jnp oracle).
 
 Public surface: typed pytree artifacts (`artifacts`) + the single
-dispatching entrypoint `query` / host convenience `query_keys`.  The old
-`*_u64` helpers and `device_tables` remain as deprecation shims.
+dispatching entrypoint `query` / host convenience `query_keys`.  Every
+artifact type has a kernel path: Bloom/HABF/ngram/Xor/WBF run dedicated
+Pallas kernels, Ada-BF rides the WBF kernel for its score-bucketed
+variable-k probe, and learned (LBF/SLBF) artifacts route their backup/pre
+Bloom probes through the Bloom kernel — `use_kernel` is honored
+everywhere, never silently ignored.
 """
 from .artifacts import (AdaBFArtifact, BloomArtifact, HABFArtifact,
                         LearnedArtifact, NgramArtifact, WBFArtifact,
                         XorArtifact, load_artifact)
 from .dispatch import query, query_keys
-from .bloom_query.ops import bloom_query, bloom_query_u64
-from .habf_query.ops import habf_query, habf_query_u64, device_tables
+from .bloom_query.ops import bloom_query
+from .habf_query.ops import habf_query
 from .ngram_blocklist.ops import (ngram_blocklist, build_blocklist,
                                   build_blocklist_bf)
+from .wbf_query.ops import wbf_query
+from .xor_query.ops import xor_query
 
 __all__ = [
     "query", "query_keys", "load_artifact",
     "BloomArtifact", "HABFArtifact", "XorArtifact", "WBFArtifact",
     "LearnedArtifact", "AdaBFArtifact", "NgramArtifact",
-    "bloom_query", "bloom_query_u64", "habf_query", "habf_query_u64",
-    "device_tables", "ngram_blocklist", "build_blocklist",
-    "build_blocklist_bf",
+    "bloom_query", "habf_query", "xor_query", "wbf_query",
+    "ngram_blocklist", "build_blocklist", "build_blocklist_bf",
 ]

@@ -3,9 +3,8 @@
 Each artifact is a frozen dataclass registered as a JAX pytree: array
 tables are leaves, shape/meta (m, k, double_hash, ...) is static aux_data.
 That means an artifact jits, vmaps, `jax.device_put`s with a sharding, and
-closes over into serving steps cleanly — replacing the stringly
-``device_tables()`` dicts and 10+-positional-argument wrappers the seed
-code used.
+closes over into serving steps cleanly — replacing the stringly table
+dicts and 10+-positional-argument wrappers the seed code used.
 
 Artifacts are produced by ``Filter.to_artifact()`` and consumed by the
 single dispatching entrypoint ``repro.kernels.query``.  ``save``/

@@ -5,12 +5,10 @@ callers should go through `repro.kernels.query(BloomArtifact, ...)`.
 """
 from __future__ import annotations
 
-import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .kernel import bloom_query_pallas
 from .ref import bloom_query_ref
@@ -27,16 +25,3 @@ def bloom_query(key_lo, key_hi, words, c1, c2, mul, *, m: int, k: int,
         return out.astype(jnp.bool_)
     return bloom_query_ref(key_lo, key_hi, words, c1, c2, mul, m, k,
                            double_hash=double_hash)
-
-
-def bloom_query_u64(bf, keys_u64: np.ndarray, use_kernel: bool = True):
-    """Deprecated shim: use `repro.kernels.query_keys(bf, keys)`.
-
-    Dispatch on double hashing now rides the artifact's static
-    `double_hash` field instead of class-name sniffing.
-    """
-    warnings.warn("bloom_query_u64 is deprecated; use "
-                  "repro.kernels.query_keys(filter, keys)",
-                  DeprecationWarning, stacklevel=2)
-    from ..dispatch import query_keys
-    return query_keys(bf, keys_u64, use_kernel=use_kernel)

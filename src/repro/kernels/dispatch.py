@@ -8,13 +8,15 @@ Dispatches on the artifact's type (see artifacts.py) instead of threading
 
 ``query_keys(filter_or_artifact, keys)`` is the host-side convenience that
 normalizes raw keys (uint64 fingerprints or strings) into the device
-layout — it replaces the old ``bloom_query_u64`` / ``habf_query_u64``
-helpers, which remain as deprecation shims.
+layout.
 
-Kernel coverage: Bloom/HABF/ngram artifacts run the Pallas kernels when
-``use_kernel=True``; Xor/WBF/learned artifacts run pure-jnp reference
-paths (portable on any backend) — ``use_kernel`` is accepted and ignored
-for those.
+Kernel coverage: ``use_kernel`` is honored for *every* artifact type —
+never accepted-and-ignored.  Bloom/HABF/ngram/Xor/WBF artifacts run their
+dedicated Pallas kernels (interpret mode off-TPU); Ada-BF routes its
+score-bucketed variable-k probe through the WBF kernel; learned (LBF/
+SLBF) artifacts run the classifier via jitted apply and route their
+backup/pre Bloom probes through the Bloom kernel.  ``use_kernel=False``
+selects the pure-jnp reference path everywhere.
 """
 from __future__ import annotations
 
@@ -24,8 +26,6 @@ import numpy as np
 
 from ..core.hashing import as_str_keys, as_u64_keys, split_u64
 from ..core.wbf import ks_for_costs
-from ..core.xor_filter import _SALT_STEP as _XOR_SALT_STEP
-from . import common
 from .artifacts import (AdaBFArtifact, BloomArtifact, HABFArtifact,
                         LearnedArtifact, NgramArtifact, WBFArtifact,
                         XorArtifact, _ArtifactBase)
@@ -33,6 +33,10 @@ from .bloom_query.ops import bloom_query
 from .bloom_query.ref import bloom_query_ref
 from .habf_query.ops import habf_query
 from .ngram_blocklist.ops import ngram_blocklist
+from .wbf_query.ops import wbf_query
+from .wbf_query.ref import wbf_query_ref
+from .xor_query.ops import xor_query
+from .xor_query.ref import xor_query_ref
 
 
 # ---------------------------------------------------------------------------
@@ -57,58 +61,51 @@ def habf_artifact_ref(art: HABFArtifact, key_lo, key_hi):
 
 def xor_artifact_ref(art: XorArtifact, key_lo, key_hi):
     """Traceable Xor-filter query (3 slot gathers + fingerprint compare)."""
-    salt = (art.seed_round * _XOR_SALT_STEP) & 0xFFFFFFFFFFFFFFFF
-    slo = jnp.uint32(salt & 0xFFFFFFFF)
-    shi = jnp.uint32(salt >> 32)
-    got = jnp.zeros(key_lo.shape, jnp.uint32)
-    for j in range(3):
-        hv = common.hash_value(key_lo ^ slo, key_hi ^ shi,
-                               art.c1[j], art.c2[j], art.mul[j])
-        slot = common.fastrange(hv, art.seg_len) + j * art.seg_len
-        got = got ^ jnp.take(art.table, slot, axis=0, mode="clip")
-    fp = common.hash_value(key_lo, key_hi, art.c1[3], art.c2[3], art.mul[3])
-    fp = jnp.maximum(fp & jnp.uint32((1 << art.fp_bits) - 1), jnp.uint32(1))
-    return got == fp
+    return xor_query_ref(key_lo, key_hi, art.table, art.c1, art.c2, art.mul,
+                         art.seg_len, art.fp_bits, art.seed_round)
 
 
 def wbf_artifact_ref(art: WBFArtifact, key_lo, key_hi, ks):
     """Traceable WBF query: probe all k_max bits, mask by per-key ks."""
-    out = jnp.ones(key_lo.shape, jnp.bool_)
-    ks = ks.astype(jnp.int32)
-    for j in range(art.k_max):
-        hv = common.hash_value(key_lo, key_hi, art.c1[j], art.c2[j],
-                               art.mul[j])
-        bit = common.probe_bits(art.words, common.fastrange(hv, art.m)) == 1
-        out = out & (bit | (j >= ks))
-    return out
+    return wbf_query_ref(key_lo, key_hi, ks, art.words, art.c1, art.c2,
+                         art.mul, art.m, art.k_max)
+
+
+def _learned_decision(art: LearnedArtifact, scores, key_lo, key_hi, probe):
+    """The one LBF/SLBF decision rule, shared by the reference and kernel
+    paths so they cannot diverge.  ``probe(bloom_art) -> bool (n,)`` picks
+    how the pre/backup Bloom tables are queried."""
+    res = jnp.ones(key_lo.shape, jnp.bool_)
+    if art.pre is not None:
+        res = res & probe(art.pre)
+    backup = probe(art.backup)
+    return res & ((scores >= art.tau) | backup)
 
 
 def learned_artifact_ref(art: LearnedArtifact, scores, key_lo, key_hi):
     """Traceable LBF/SLBF decision given classifier scores."""
-    res = jnp.ones(key_lo.shape, jnp.bool_)
-    if art.pre is not None:
-        res = res & bloom_artifact_ref(art.pre, key_lo, key_hi)
-    backup = bloom_artifact_ref(art.backup, key_lo, key_hi)
-    return res & ((scores >= art.tau) | backup)
+    return _learned_decision(art, scores, key_lo, key_hi,
+                             lambda bf: bloom_artifact_ref(bf, key_lo,
+                                                           key_hi))
+
+
+def adabf_ks(art: AdaBFArtifact, scores):
+    """Per-key hash counts from classifier scores: score bucket -> k.
+    Shared by the reference and kernel paths so they cannot diverge."""
+    return jnp.take(art.ks, jnp.searchsorted(art.taus, scores),
+                    mode="clip").astype(jnp.int32)
 
 
 def adabf_artifact_ref(art: AdaBFArtifact, scores, key_lo, key_hi):
-    """Traceable Ada-BF decision: score bucket -> hash count -> probes."""
-    ks = art.ks[jnp.searchsorted(art.taus, scores)].astype(jnp.int32)
-    out = jnp.ones(key_lo.shape, jnp.bool_)
-    for j in range(art.bf.k):
-        hv = common.hash_value(key_lo, key_hi, art.bf.c1[j], art.bf.c2[j],
-                               art.bf.mul[j])
-        bit = common.probe_bits(art.bf.words,
-                                common.fastrange(hv, art.bf.m)) == 1
-        out = out & (bit | (j >= ks))
-    return out
+    """Traceable Ada-BF decision: score bucket -> hash count -> probes.
+    The probe is exactly a WBF probe over the underlying Bloom table."""
+    return wbf_query_ref(key_lo, key_hi, adabf_ks(art, scores),
+                         art.bf.words, art.bf.c1, art.bf.c2, art.bf.mul,
+                         art.bf.m, art.bf.k)
 
 
-_xor_jit = jax.jit(xor_artifact_ref)
-_wbf_jit = jax.jit(wbf_artifact_ref)
 _learned_jit = jax.jit(learned_artifact_ref)
-_adabf_jit = jax.jit(adabf_artifact_ref)
+_adabf_ks_jit = jax.jit(adabf_ks)
 
 _APPLY_JIT: dict[str, object] = {}
 
@@ -139,9 +136,14 @@ def query(artifact, key_lo, key_hi=None, *, use_kernel: bool = True,
       (n,)-shaped uint32 key halves (see ``hashing.split_u64``).
     * ``NgramArtifact`` takes a (B, T) int32 token batch as the first
       array argument and flags the trailing n-gram at every position.
-    * WBF takes optional per-key hash counts ``ks`` (defaults to k_bar).
+    * WBF takes optional per-key hash counts ``ks`` (defaults to the
+      artifact's ``k_fallback`` zero-FNR floor).
     * Learned artifacts need ``bytes_mat`` (``learned.encode_keys`` of the
       raw strings) to featurize; use ``query_keys`` to get this for free.
+
+    ``use_kernel`` selects the Pallas kernel path (interpret mode off-TPU)
+    and is honored for every artifact type; ``use_kernel=False`` runs the
+    pure-jnp reference.
     """
     if getattr(key_lo, "size", 1) == 0:
         # empty batch: nothing to probe (the Pallas grid can't be empty)
@@ -168,20 +170,40 @@ def query(artifact, key_lo, key_hi=None, *, use_kernel: bool = True,
                                k=artifact.k, n=artifact.n,
                                use_kernel=use_kernel, interpret=interpret)
     if isinstance(artifact, XorArtifact):
-        return _xor_jit(artifact, key_lo, key_hi)
+        return xor_query(key_lo, key_hi, artifact.table, artifact.c1,
+                         artifact.c2, artifact.mul, seg_len=artifact.seg_len,
+                         fp_bits=artifact.fp_bits,
+                         seed_round=artifact.seed_round,
+                         use_kernel=use_kernel, interpret=interpret)
     if isinstance(artifact, WBFArtifact):
         if ks is None:
             ks = jnp.full(key_lo.shape, artifact.k_fallback, jnp.int32)
-        return _wbf_jit(artifact, key_lo, key_hi, jnp.asarray(ks))
+        return wbf_query(key_lo, key_hi, jnp.asarray(ks), artifact.words,
+                         artifact.c1, artifact.c2, artifact.mul,
+                         m=artifact.m, k_max=artifact.k_max,
+                         use_kernel=use_kernel, interpret=interpret)
     if isinstance(artifact, (LearnedArtifact, AdaBFArtifact)):
         if bytes_mat is None:
             raise ValueError("learned artifacts need bytes_mat= (the "
                              "byte-encoded key strings); see query_keys")
         scores = classifier_scores(artifact.model_kind, artifact.params,
                                    bytes_mat)
-        if isinstance(artifact, LearnedArtifact):
+        if isinstance(artifact, AdaBFArtifact):
+            # Ada-BF's score-bucketed probe IS a WBF probe over its table
+            bf = artifact.bf
+            return wbf_query(key_lo, key_hi, _adabf_ks_jit(artifact, scores),
+                             bf.words, bf.c1, bf.c2, bf.mul, m=bf.m,
+                             k_max=bf.k, use_kernel=use_kernel,
+                             interpret=interpret)
+        if not use_kernel:
             return _learned_jit(artifact, scores, key_lo, key_hi)
-        return _adabf_jit(artifact, scores, key_lo, key_hi)
+        # kernel path: classifier scoring stays a jitted apply (fusing it
+        # into the probe kernel is a separate roadmap item); the backup /
+        # pre Bloom probes run the bloom kernel
+        return _learned_decision(
+            artifact, scores, key_lo, key_hi,
+            lambda bf: query(bf, key_lo, key_hi, use_kernel=True,
+                             interpret=interpret))
     raise TypeError(f"not a filter artifact: {type(artifact).__name__}")
 
 

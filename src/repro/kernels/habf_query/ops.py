@@ -5,12 +5,10 @@ callers should go through `repro.kernels.query(HABFArtifact, ...)`.
 """
 from __future__ import annotations
 
-import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .kernel import habf_query_pallas
 from .ref import habf_query_ref
@@ -30,24 +28,3 @@ def habf_query(key_lo, key_hi, words, hx_hashidx, hx_endbit, c1, c2, mul,
     return habf_query_ref(key_lo, key_hi, words, hx_hashidx, hx_endbit,
                           c1, c2, mul, f_consts[0], f_consts[1], f_consts[2],
                           h0_idx, m, omega, k, double_hash=double_hash)
-
-
-def device_tables(habf) -> dict:
-    """Deprecated shim: use `habf.to_artifact()` (typed pytree) instead of
-    a stringly dict."""
-    warnings.warn("kernels.habf_query.device_tables is deprecated; use "
-                  "habf.to_artifact()", DeprecationWarning, stacklevel=2)
-    a = habf.to_artifact()
-    return dict(words=a.words, hx_hashidx=a.hx_hashidx,
-                hx_endbit=a.hx_endbit, c1=a.c1, c2=a.c2, mul=a.mul,
-                f_consts=a.f_consts, h0_idx=a.h0_idx, m=a.m, omega=a.omega,
-                k=a.k, double_hash=a.double_hash)
-
-
-def habf_query_u64(habf, keys_u64: np.ndarray, use_kernel: bool = True):
-    """Deprecated shim: use `repro.kernels.query_keys(habf, keys)`."""
-    warnings.warn("habf_query_u64 is deprecated; use "
-                  "repro.kernels.query_keys(filter, keys)",
-                  DeprecationWarning, stacklevel=2)
-    from ..dispatch import query_keys
-    return query_keys(habf, keys_u64, use_kernel=use_kernel)

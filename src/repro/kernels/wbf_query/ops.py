@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the variable-k Weighted-Bloom query kernel.
+
+The positional `wbf_query` is the low-level jit surface; typed callers
+should go through `repro.kernels.query(WBFArtifact, ...)`.  Ada-BF
+artifacts reuse this kernel too: their score-bucketed per-key hash
+counts are exactly a WBF ``ks`` vector over a Bloom table.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wbf_query_pallas
+from .ref import wbf_query_ref
+
+
+@partial(jax.jit, static_argnames=("m", "k_max", "use_kernel", "interpret"))
+def wbf_query(key_lo, key_hi, ks, words, c1, c2, mul, *, m: int, k_max: int,
+              use_kernel: bool = True, interpret: bool | None = None):
+    if use_kernel:
+        out = wbf_query_pallas(key_lo, key_hi, ks, words, c1, c2, mul, m,
+                               k_max, interpret=interpret)
+        return out.astype(jnp.bool_)
+    return wbf_query_ref(key_lo, key_hi, ks, words, c1, c2, mul, m, k_max)

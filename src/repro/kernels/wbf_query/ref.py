@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the batched Weighted-Bloom-filter query.
+
+The WBF probe is a Bloom probe with a *per-key* hash count ``ks`` (Bruck
+et al. 2006): all ``k_max`` probes are evaluated branchlessly and probe
+``j`` is masked out for keys with ``ks <= j``.  ``ks`` comes from the
+query-side cost bucketing (``core.wbf.ks_for_costs``), the artifact's
+top-cost k-cache, or the ``k_fallback`` zero-FNR floor — all of which
+produce a plain (n,) int32 array, so the probe itself never leaves the
+device.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import common
+
+
+def wbf_query_ref(key_lo, key_hi, ks, words, c1, c2, mul, m: int,
+                  k_max: int):
+    """key_lo/key_hi: (n,) uint32 halves.  ks: (n,) int per-key probe
+    counts (clamped to [1, k_max] by the caller).  words: (W,) uint32 bit
+    vector.  c1/c2/mul: (>=k_max,) uint32 constants.  Returns (n,) bool."""
+    out = jnp.ones(key_lo.shape, jnp.bool_)
+    ks = ks.astype(jnp.int32)
+    for j in range(k_max):
+        hv = common.hash_value(key_lo, key_hi, c1[j], c2[j], mul[j])
+        bit = common.probe_bits(words, common.fastrange(hv, m)) == 1
+        out = out & (bit | (j >= ks))
+    return out

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused Xor-filter probe.
+
+Same skeleton as bloom_query: the whole fingerprint table stays resident
+in VMEM via a full-array BlockSpec (1.23 bits-per-key tables are far
+below the 16 MB budget at paper scales); keys stream HBM->VMEM in
+(8, 128) tiles.  The 3 salted slot gathers and the fingerprint compare
+fuse into one pass — the salt is static (derived from the artifact's
+``seed_round``), so it folds into the hashing constants at trace time.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import common
+from .ref import xor_salt
+
+BLOCK = 1024
+_SUB = 8
+_LANE = 128
+
+
+def _kernel(lo_ref, hi_ref, table_ref, c1_ref, c2_ref, mul_ref, out_ref,
+            *, seg_len: int, fp_bits: int, salt_lo: int, salt_hi: int):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    table = table_ref[...]
+    slo = lo ^ jnp.uint32(salt_lo)
+    shi = hi ^ jnp.uint32(salt_hi)
+    got = jnp.zeros(lo.shape, jnp.uint32)
+    for j in range(3):
+        hv = common.hash_value(slo, shi, c1_ref[j], c2_ref[j], mul_ref[j])
+        slot = common.fastrange(hv, seg_len) + jnp.uint32(j * seg_len)
+        got = got ^ jnp.take(table, slot.astype(jnp.int32).reshape(-1),
+                             axis=0, mode="clip").reshape(slot.shape)
+    fp = common.hash_value(lo, hi, c1_ref[3], c2_ref[3], mul_ref[3])
+    fp = jnp.maximum(fp & jnp.uint32((1 << fp_bits) - 1), jnp.uint32(1))
+    out_ref[...] = (got == fp).astype(jnp.uint32)
+
+
+def xor_query_pallas(key_lo, key_hi, table, c1, c2, mul, seg_len: int,
+                     fp_bits: int, seed_round: int,
+                     interpret: bool | None = None):
+    """(n,) uint32 key halves -> (n,) uint32 membership flags (0/1)."""
+    if interpret is None:
+        interpret = common.TPU_INTERPRET
+    (lo_p, n) = common.pad_to(key_lo, BLOCK)
+    (hi_p, _) = common.pad_to(key_hi, BLOCK)
+    nb = lo_p.shape[0] // BLOCK
+    lo2 = lo_p.reshape(nb * _SUB, _LANE)
+    hi2 = hi_p.reshape(nb * _SUB, _LANE)
+
+    salt_lo, salt_hi = xor_salt(seed_round)
+    kern = partial(_kernel, seg_len=seg_len, fp_bits=fp_bits,
+                   salt_lo=salt_lo, salt_hi=salt_hi)
+    out = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((_SUB, _LANE), lambda i: (i, 0)),   # keys lo
+            pl.BlockSpec((_SUB, _LANE), lambda i: (i, 0)),   # keys hi
+            pl.BlockSpec(table.shape, lambda i: (0,)),       # table: VMEM-resident
+            pl.BlockSpec(c1.shape, lambda i: (0,)),
+            pl.BlockSpec(c2.shape, lambda i: (0,)),
+            pl.BlockSpec(mul.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_SUB, _LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * _SUB, _LANE), jnp.uint32),
+        interpret=interpret,
+    )(lo2, hi2, table, c1, c2, mul)
+    return out.reshape(-1)[:n]

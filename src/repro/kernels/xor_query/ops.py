@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the Xor-filter query kernel.
+
+The positional `xor_query` is the low-level jit surface; typed callers
+should go through `repro.kernels.query(XorArtifact, ...)`.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import xor_query_pallas
+from .ref import xor_query_ref
+
+
+@partial(jax.jit, static_argnames=("seg_len", "fp_bits", "seed_round",
+                                   "use_kernel", "interpret"))
+def xor_query(key_lo, key_hi, table, c1, c2, mul, *, seg_len: int,
+              fp_bits: int, seed_round: int, use_kernel: bool = True,
+              interpret: bool | None = None):
+    if use_kernel:
+        out = xor_query_pallas(key_lo, key_hi, table, c1, c2, mul, seg_len,
+                               fp_bits, seed_round, interpret=interpret)
+        return out.astype(jnp.bool_)
+    return xor_query_ref(key_lo, key_hi, table, c1, c2, mul, seg_len,
+                         fp_bits, seed_round)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the batched Xor-filter query.
+
+The query is 3 salted slot gathers xor'd together and compared against
+the key's fingerprint (Graf & Lemire 2020); the per-round key salt is
+recomputed from the artifact's static ``seed_round`` exactly as the host
+peeler derived it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import common
+from ...core.xor_filter import _SALT_STEP
+
+_MASK64 = 0xFFFFFFFFFFFFFFFF
+
+
+def xor_salt(seed_round: int) -> tuple[int, int]:
+    """Static (lo, hi) uint32 halves of the winning round's key salt."""
+    salt = (seed_round * _SALT_STEP) & _MASK64
+    return salt & 0xFFFFFFFF, salt >> 32
+
+
+def xor_query_ref(key_lo, key_hi, table, c1, c2, mul, seg_len: int,
+                  fp_bits: int, seed_round: int):
+    """key_lo/key_hi: (n,) uint32 halves.  table: (3 * seg_len,) uint32
+    fingerprints.  c1/c2/mul: (4,) uint32 — 3 slot hashes + 1 fingerprint
+    hash.  Returns (n,) bool."""
+    slo, shi = xor_salt(seed_round)
+    lo = key_lo ^ jnp.uint32(slo)
+    hi = key_hi ^ jnp.uint32(shi)
+    got = jnp.zeros(key_lo.shape, jnp.uint32)
+    for j in range(3):
+        hv = common.hash_value(lo, hi, c1[j], c2[j], mul[j])
+        slot = common.fastrange(hv, seg_len) + j * seg_len
+        got = got ^ jnp.take(table, slot, axis=0, mode="clip")
+    fp = common.hash_value(key_lo, key_hi, c1[3], c2[3], mul[3])
+    fp = jnp.maximum(fp & jnp.uint32((1 << fp_bits) - 1), jnp.uint32(1))
+    return got == fp

@@ -17,8 +17,6 @@ tables that close over into the jitted steps — and, being pytrees, can be
 """
 from __future__ import annotations
 
-import warnings
-
 import jax
 import jax.numpy as jnp
 
@@ -69,24 +67,6 @@ def make_decode_step(model: Model, blocklist: NgramArtifact | None = None):
         return out, cache
 
     return decode_step
-
-
-# -- deprecated table builders (artifact-era shims) -------------------------
-
-def habf_gate_tables(habf) -> HABFArtifact:
-    """Deprecated: use `habf.to_artifact()`."""
-    warnings.warn("habf_gate_tables is deprecated; use habf.to_artifact()",
-                  DeprecationWarning, stacklevel=2)
-    return habf.to_artifact()
-
-
-def blocklist_tables(bf, n: int = 4) -> NgramArtifact:
-    """Deprecated: use `NgramArtifact.from_filter(bf, n)` or
-    `kernels.build_blocklist`."""
-    warnings.warn("blocklist_tables is deprecated; use "
-                  "NgramArtifact.from_filter(bf, n)",
-                  DeprecationWarning, stacklevel=2)
-    return NgramArtifact.from_filter(bf, n)
 
 
 def generate(model: Model, params, prompt_batch: dict, cache, steps: int,

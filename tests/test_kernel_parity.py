@@ -1,0 +1,189 @@
+"""Interpret-mode parity matrix: every kernel (bloom, habf, ngram, xor,
+wbf — plus the adabf/learned routes that ride them) against its pure-jnp
+ref across batch sizes {0, 1, 7, 1024}, double_hash on/off, and skewed
+ks/costs.  Also the `use_kernel` regression tests: the flag must reach
+the kernel-capable op for every artifact type, never be silently ignored.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SpaceBudget, make_filter, zipf_costs
+from repro.core.hashing import split_u64
+from repro.kernels import build_blocklist, query, query_keys
+
+BATCHES = (0, 1, 7, 1024)
+
+# name -> (registry name, double_hash expected on the artifact)
+U64_CASES = {
+    "bloom": ("bloom", False),
+    "bloom-double": ("bloom-double", True),
+    "habf": ("habf", False),
+    "fhabf": ("fhabf", True),
+    "xor": ("xor", False),
+    "wbf": ("wbf", False),
+}
+
+
+@pytest.fixture(scope="module")
+def keysets():
+    rng = np.random.default_rng(17)
+    keys = rng.choice(np.uint64(1) << np.uint64(62), 8000,
+                      replace=False).astype(np.uint64)
+    return keys[:4000], keys[4000:]
+
+
+@pytest.fixture(scope="module")
+def filters(keysets):
+    pos, neg = keysets
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    out = {}
+    for name, (reg, _) in U64_CASES.items():
+        kw = {}
+        if reg == "wbf":
+            # skewed insert costs: low-cost keys get k_e < k_bar and fall
+            # out of the cache, exercising the k_fallback path
+            kw["pos_costs"] = zipf_costs(len(pos), 1.5, 9)
+        out[name] = make_filter(reg, pos, neg, zipf_costs(len(neg), 1.0, 2),
+                                space=space, seed=0, **kw)
+    return out
+
+
+def _probe(pos, neg, batch):
+    return np.concatenate([pos[:batch // 2], neg[:batch - batch // 2]])
+
+
+@pytest.mark.parametrize("batch", BATCHES)
+@pytest.mark.parametrize("name", sorted(U64_CASES))
+def test_kernel_matches_ref_and_host(name, batch, keysets, filters):
+    pos, neg = keysets
+    f = filters[name]
+    assert f.to_artifact().meta().get("double_hash",
+                                     False) == U64_CASES[name][1]
+    probe = _probe(pos, neg, batch)
+    kern = np.asarray(query_keys(f, probe, use_kernel=True, interpret=True))
+    ref = np.asarray(query_keys(f, probe, use_kernel=False))
+    host = np.asarray(f.query(probe))
+    assert kern.shape == (batch,)
+    np.testing.assert_array_equal(kern, ref)
+    np.testing.assert_array_equal(kern, host)
+
+
+@pytest.mark.parametrize("batch", BATCHES)
+def test_wbf_kernel_skewed_query_costs(batch, keysets, filters):
+    """Per-key ks from skewed query-side costs (ks_for_costs bucketing)."""
+    pos, neg = keysets
+    f = filters["wbf"]
+    probe = _probe(pos, neg, batch)
+    costs = zipf_costs(max(batch, 1), 1.5, 3)[:batch]
+    kern = np.asarray(query_keys(f, probe, costs=costs, use_kernel=True,
+                                 interpret=True))
+    ref = np.asarray(query_keys(f, probe, costs=costs, use_kernel=False))
+    host = np.asarray(f.query(probe, costs))
+    np.testing.assert_array_equal(kern, ref)
+    np.testing.assert_array_equal(kern, host)
+
+
+@pytest.mark.parametrize("batch", BATCHES)
+def test_wbf_kernel_extreme_ks(batch, keysets, filters):
+    """ks pinned to the clamp bounds {1, k_max} lane-by-lane."""
+    pos, neg = keysets
+    f, art = filters["wbf"], filters["wbf"].to_artifact()
+    probe = _probe(pos, neg, batch)
+    lo, hi = split_u64(probe)
+    ks = np.where(np.arange(batch) % 2 == 0, 1, art.k_max).astype(np.int32)
+    kern = np.asarray(query(art, jnp.asarray(lo), jnp.asarray(hi),
+                            ks=jnp.asarray(ks), use_kernel=True,
+                            interpret=True))
+    ref = np.asarray(query(art, jnp.asarray(lo), jnp.asarray(hi),
+                           ks=jnp.asarray(ks), use_kernel=False))
+    np.testing.assert_array_equal(kern, ref)
+
+
+@pytest.mark.parametrize("B", (0, 1, 7, 16))
+def test_ngram_kernel_matches_ref(B):
+    rng = np.random.default_rng(B)
+    T, n = 64, 4
+    tokens = rng.integers(0, 5000, (B, T)).astype(np.int32)
+    grams = rng.integers(0, 5000, (40, n)).astype(np.int32)
+    art = build_blocklist(grams, 1 << 14, k=3)
+    kern = np.asarray(query(art, jnp.asarray(tokens), use_kernel=True,
+                            interpret=True))
+    ref = np.asarray(query(art, jnp.asarray(tokens), use_kernel=False))
+    assert kern.shape == (B, T)
+    np.testing.assert_array_equal(kern, ref)
+
+
+# ---------------------------------------------------------------------------
+# learned routes (classifier scores + kernel probes)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def learned():
+    from repro.core.datasets import make_shalla
+    ds = make_shalla(scale=0.002, seed=3)
+    space = SpaceBudget.from_bits_per_key(12, ds.n_pos)
+    return ds, {name: make_filter(name, ds.pos_strs, ds.neg_strs,
+                                  space=space, seed=0)
+                for name in ("slbf", "adabf")}
+
+
+@pytest.mark.parametrize("batch", (0, 1, 7, 512))
+@pytest.mark.parametrize("name", ("slbf", "adabf"))
+def test_learned_kernel_matches_ref_and_host(name, batch, learned):
+    ds, filts = learned
+    f = filts[name]
+    probe = (ds.pos_strs + ds.neg_strs)[:batch]
+    kern = np.asarray(query_keys(f, probe, use_kernel=True, interpret=True))
+    ref = np.asarray(query_keys(f, probe, use_kernel=False))
+    host = np.asarray(f.query(probe))
+    assert kern.shape == (batch,)
+    np.testing.assert_array_equal(kern, ref)
+    np.testing.assert_array_equal(kern, host)
+
+
+# ---------------------------------------------------------------------------
+# use_kernel threading regression (dispatch docstring/behavior contract)
+# ---------------------------------------------------------------------------
+
+def _spy_on(monkeypatch, name):
+    """Record the use_kernel= each dispatch-level op call receives."""
+    from repro.kernels import dispatch
+    calls = []
+    real = getattr(dispatch, name)
+
+    def spy(*a, **kw):
+        calls.append(kw.get("use_kernel"))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(dispatch, name, spy)
+    return calls
+
+
+@pytest.mark.parametrize("use_kernel", (True, False))
+@pytest.mark.parametrize("name,op", [("xor", "xor_query"),
+                                     ("wbf", "wbf_query"),
+                                     ("bloom", "bloom_query")])
+def test_use_kernel_never_silently_ignored(name, op, use_kernel, keysets,
+                                           filters, monkeypatch):
+    pos, neg = keysets
+    calls = _spy_on(monkeypatch, op)
+    query_keys(filters[name], neg[:32], use_kernel=use_kernel)
+    assert calls == [use_kernel], (
+        f"{op} must receive use_kernel={use_kernel}, got {calls}")
+
+
+@pytest.mark.parametrize("use_kernel", (True, False))
+def test_use_kernel_reaches_adabf_probe(use_kernel, learned, monkeypatch):
+    ds, filts = learned
+    calls = _spy_on(monkeypatch, "wbf_query")
+    query_keys(filts["adabf"], ds.neg_strs[:16], use_kernel=use_kernel)
+    assert calls == [use_kernel]
+
+
+def test_use_kernel_reaches_learned_bloom_probes(learned, monkeypatch):
+    ds, filts = learned
+    calls = _spy_on(monkeypatch, "bloom_query")
+    query_keys(filts["slbf"], ds.neg_strs[:16], use_kernel=True)
+    # SLBF = pre + backup Bloom probes, both through the kernel op
+    assert calls == [True, True]

@@ -70,22 +70,20 @@ def test_habf_kernel_matches_host(fast, k):
     assert np.asarray(query_keys(h, pos)).all()
 
 
-def test_deprecated_u64_shims_still_work():
+def test_deprecated_shims_removed():
+    """PR-1 deprecation shims are gone for good: neither the kernels
+    package nor the filters re-grow the stringly table surfaces."""
+    import repro.kernels as kernels
+    for name in ("bloom_query_u64", "habf_query_u64", "device_tables"):
+        assert not hasattr(kernels, name), f"shim {name} resurfaced"
     rng = np.random.default_rng(11)
-    pos, neg = _keys(rng, 2000), _keys(rng, 2000)
-    bf = BloomFilter(1 << 15, k=4)
+    pos, neg = _keys(rng, 200), _keys(rng, 200)
+    bf = BloomFilter(1 << 12, k=4)
     bf.insert(pos)
-    h = HABF.build(pos, neg, None, total_bytes=2000 * 10 // 8, k=3, seed=0)
-    from repro.kernels import bloom_query_u64, habf_query_u64, device_tables
-    with pytest.deprecated_call():
-        out = np.asarray(bloom_query_u64(bf, neg))
-    np.testing.assert_array_equal(out, bf.query(neg))
-    with pytest.deprecated_call():
-        out = np.asarray(habf_query_u64(h, neg, use_kernel=False))
-    np.testing.assert_array_equal(out, h.query(neg))
-    with pytest.deprecated_call():
-        t = device_tables(h)
-    assert t["m"] == h.bf.bits.m and t["omega"] == h.hx.omega
+    h = HABF.build(pos, neg, None, total_bytes=200 * 10 // 8, k=3, seed=0)
+    for obj in (bf, h, h.hx):
+        assert not hasattr(obj, "device_tables"), (
+            f"{type(obj).__name__}.device_tables resurfaced")
 
 
 @pytest.mark.parametrize("B,T,n", [(1, 64, 3), (4, 300, 4), (9, 1024, 5)])

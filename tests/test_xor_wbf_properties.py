@@ -1,0 +1,117 @@
+"""Property tests for the Xor/WBF kernel invariants (hypothesis; offline
+containers get the deterministic fallback via tests/conftest.py):
+
+* zero FNR on inserted keys — host, jnp ref, and Pallas kernel;
+* fp_bits masking never produces fingerprint 0 (host and device mirrors
+  agree bit-for-bit);
+* `query_keys(artifact, costs=)` agrees with the live filter's
+  `ks_for_costs` bucketing and query decisions.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SpaceBudget, make_filter
+from repro.core.wbf import WeightedBloomFilter, ks_for_costs
+from repro.core.xor_filter import XorFilter, _FP_FAMILY, _fingerprint
+from repro.kernels import query_keys
+
+u64s = st.integers(min_value=0, max_value=(1 << 62) - 1)
+
+
+def _np_keys(keys):
+    return np.asarray(keys, np.uint64)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(u64s, min_size=1, max_size=64),
+       st.integers(min_value=2, max_value=16))
+def test_xor_zero_fnr_host_ref_kernel(keys, fp_bits):
+    keys = _np_keys(keys)
+    f = XorFilter(keys, fingerprint_bits=fp_bits)
+    assert f.query(keys).all(), "host FNR > 0"
+    assert np.asarray(query_keys(f, keys, use_kernel=False)).all(), \
+        "jnp ref FNR > 0"
+    assert np.asarray(query_keys(f, keys, use_kernel=True,
+                                 interpret=True)).all(), "kernel FNR > 0"
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(u64s, min_size=1, max_size=128),
+       st.integers(min_value=1, max_value=32))
+def test_xor_fingerprint_never_zero(keys, fp_bits):
+    keys = _np_keys(keys)
+    host_fp = _fingerprint(keys, fp_bits)
+    assert (host_fp != 0).all(), "host fp_bits masking produced 0"
+    # device mirror (the exact computation the ref and kernel share)
+    import jax.numpy as jnp
+    from repro.core.hashing import split_u64
+    from repro.kernels import common
+    lo, hi = split_u64(keys)
+    dev_fp = common.hash_value(jnp.asarray(lo), jnp.asarray(hi),
+                               jnp.asarray(_FP_FAMILY["c1"][3]),
+                               jnp.asarray(_FP_FAMILY["c2"][3]),
+                               jnp.asarray(_FP_FAMILY["mul"][3]))
+    dev_fp = jnp.maximum(dev_fp & jnp.uint32((1 << fp_bits) - 1),
+                         jnp.uint32(1))
+    assert (np.asarray(dev_fp) != 0).all(), "device fp masking produced 0"
+    np.testing.assert_array_equal(np.asarray(dev_fp), host_fp)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(u64s, min_size=2, max_size=64),
+       st.floats(min_value=0.0, max_value=2.0),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=4),
+       st.booleans())
+def test_wbf_zero_fnr_under_skewed_costs(keys, skew, k_bar, k_extra,
+                                         use_kernel):
+    keys = _np_keys(keys)
+    rng = np.random.default_rng(0)
+    costs = np.exp(skew * rng.standard_normal(len(keys)))
+    wbf = WeightedBloomFilter(4096, k_bar=k_bar, k_max=k_bar + k_extra)
+    wbf.insert(keys, costs)
+    assert wbf.query(keys).all(), "host FNR > 0"
+    # uncached fallback path (no costs at query time) stays zero-FNR
+    assert np.asarray(query_keys(wbf, keys, use_kernel=use_kernel,
+                                 interpret=True)).all(), "device FNR > 0"
+    # supplying the insert-time costs recovers the exact k_e per key
+    assert np.asarray(query_keys(wbf, keys, costs=costs,
+                                 use_kernel=use_kernel,
+                                 interpret=True)).all(), \
+        "device FNR > 0 with costs="
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.floats(min_value=1e-3, max_value=1e3),
+                min_size=1, max_size=64),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=4))
+def test_wbf_ks_bucketing_bounds_and_parity(costs, k_bar, k_extra):
+    k_max = k_bar + k_extra
+    costs = np.asarray(costs, np.float64)
+    ks = ks_for_costs(costs, k_bar, k_max)
+    assert ((ks >= 1) & (ks <= k_max)).all(), "ks escaped [1, k_max]"
+    # the live filter's query-side bucketing is the same shared function
+    wbf = WeightedBloomFilter(2048, k_bar=k_bar, k_max=k_max)
+    keys = np.arange(1, len(costs) + 1, dtype=np.uint64)
+    np.testing.assert_array_equal(ks, wbf.query_ks(keys, costs))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=16, max_value=200),
+       st.floats(min_value=0.5, max_value=1.5))
+def test_wbf_query_costs_agrees_with_live_filter(n, skew):
+    rng = np.random.default_rng(n)
+    pos = rng.choice(np.uint64(1) << np.uint64(62), 2 * n,
+                     replace=False).astype(np.uint64)
+    pos, neg = pos[:n], pos[n:]
+    space = SpaceBudget.from_bits_per_key(10, n)
+    f = make_filter("wbf", pos, space=space,
+                    pos_costs=np.exp(skew * rng.standard_normal(n)))
+    qcosts = np.exp(skew * rng.standard_normal(n))
+    art = f.to_artifact()
+    host = np.asarray(f.query(neg, qcosts))
+    for uk in (False, True):
+        dev = np.asarray(query_keys(art, neg, costs=qcosts, use_kernel=uk,
+                                    interpret=True))
+        np.testing.assert_array_equal(host, dev)
