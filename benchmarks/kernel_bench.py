@@ -73,6 +73,7 @@ def serving_throughput(seed=0):
     out = run(arch="qwen3-0.6b", reduced=True, batch=8, prompt_len=48,
               gen=16, seed=seed)
     fs = out["filter_stats"]
+    adm = out["bank_telemetry"]["admission"]
     return [
         ("serve_tokens_per_s", 1e6 / max(out["tokens_per_s"], 1e-9),
          f"tokens_per_s={out['tokens_per_s']:.1f}"),
@@ -81,4 +82,45 @@ def serving_throughput(seed=0):
         ("serve_filter_habf_vs_bf", 0.0,
          f"habf_wfpr={fs['habf_weighted_fpr']:.2e};"
          f"bf_wfpr={fs['bf_weighted_fpr']:.2e}"),
+        ("serve_bank_admission", 0.0,
+         f"fused={adm['fused_queries']};hit_rate={adm['hit_rate']:.3f};"
+         f"bytes={adm['bytes']}"),
     ]
+
+
+def bank_dispatch(scale=0.01, seed=0, n_query=200_000):
+    """FilterBank dispatch overhead vs a direct `query_keys` call: the
+    name-lookup + telemetry accounting the serving layer pays per batch."""
+    from repro.kernels import query_keys
+    from repro.runtime.filter_bank import FilterBank
+
+    rows = []
+    ds = make_dataset("shalla", scale, seed)
+    space_bytes = ds.n_pos * 10 // 8
+    h = HABF.build(ds.pos_u64, ds.neg_u64, None, total_bytes=space_bytes,
+                   k=3, seed=seed)
+    bf = BloomFilter(space_bytes * 8, k=4)
+    bf.insert(ds.pos_u64)
+    bank = FilterBank()
+    bank.register("admission", h)
+    bank.register("dedup", bf)
+    rng = np.random.default_rng(seed)
+    q = rng.choice(np.concatenate([ds.pos_u64, ds.neg_u64]), n_query)
+
+    def bench(fn, name):
+        fn()  # compile/warm
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        rows.append((f"bank_{name}", dt / n_query * 1e6,
+                     f"keys_per_s={n_query / dt:.3g}"))
+
+    bench(lambda: np.asarray(query_keys(h.to_artifact(), q)), "direct_habf")
+    bench(lambda: np.asarray(bank.query("admission", q)), "dispatch_habf")
+    bench(lambda: bank.query_batch({"admission": q, "dedup": q}),
+          "batch_2filters")
+    tel = bank.telemetry("admission")
+    rows.append(("bank_telemetry", 0.0,
+                 f"queries={tel['queries']};kernel={tel['kernel_queries']}"))
+    bank.close()
+    return rows

@@ -37,6 +37,7 @@ def suites(scale: float, seed: int, with_learned: bool):
         "fig15": lambda: paper_figs.fig15_memory(scale / 2, seed),
         "kernels": lambda: kernel_bench.kernel_throughput(scale, seed),
         "serving": lambda: kernel_bench.serving_throughput(seed),
+        "bank": lambda: kernel_bench.bank_dispatch(scale, seed),
     }
 
 

@@ -49,3 +49,23 @@ dev2 = np.asarray(query_keys(load_artifact("/tmp/habf_artifact.npz"),
                              ds.neg_u64))
 assert (dev2 == host).all()
 print("artifact npz round-trip matches too")
+
+# 5. serving several filters per pod: a FilterBank registers named
+#    artifacts, places each one mesh-aware (small tables replicated for
+#    VMEM residency, 1MB+ words/table arrays sharded over `model`), and
+#    serves them behind one entrypoint with per-filter telemetry (probe
+#    counts, hit rate, estimated FP cost, kernel-vs-ref path).  See
+#    examples/multi_filter_serve.py for the full serving demo with the
+#    admission gate + n-gram blocklist fused into jitted decode steps.
+from repro.runtime.filter_bank import FilterBank
+
+bank = FilterBank()              # pass mesh= for sharded placement
+bank.register("admission", habf)
+bank.register("dedup", bf)
+hits = bank.query_batch({"admission": ds.neg_u64, "dedup": ds.neg_u64},
+                        costs=costs)
+assert (np.asarray(hits["admission"]) == host).all()
+print("FilterBank serves both filters behind one entrypoint:")
+print(bank.summary())
+# bank.swap("dedup", rebuilt_filter) is the double-buffered hot-swap
+# publish point for background rebuilds.

@@ -78,4 +78,44 @@ assert not ours, "DeprecationWarning from repro.*: " + \
     "; ".join(f"{w.filename}:{w.lineno}: {w.message}" for w in ours)
 print("kernel parity smoke OK (and no repro DeprecationWarnings)")
 EOF
+
+echo "== multi-filter serve smoke (FilterBank: bloom + habf + ngram) =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import numpy as np
+
+from repro.core import SpaceBudget, make_filter, zipf_costs
+from repro.kernels import build_blocklist
+from repro.runtime.filter_bank import FilterBank
+
+rng = np.random.default_rng(0)
+keys = rng.choice(np.uint64(1) << np.uint64(62), 8000,
+                  replace=False).astype(np.uint64)
+pos, neg = keys[:4000], keys[4000:]
+space = SpaceBudget.from_bits_per_key(10, len(pos))
+bank = FilterBank()  # interpret-mode kernels on this CPU container
+habf = make_filter("habf", pos, neg, zipf_costs(len(neg), 1.0, 1),
+                   space=space, seed=0)
+bloom = make_filter("bloom", pos, space=space)
+bank.register("admission", habf)
+bank.register("dedup", bloom)
+bank.register("blocklist", build_blocklist(
+    rng.integers(0, 1000, (32, 4)).astype(np.int32), 1 << 14, k=3))
+probe = np.concatenate([pos[:1000], neg[:1000]])
+for name, f in (("admission", habf), ("dedup", bloom)):
+    assert (np.asarray(bank.query(name, probe)) == f.query(probe)).all(), name
+    assert np.asarray(bank.query(name, pos)).all(), f"{name}: FNR > 0"
+toks = np.asarray(bank.query("blocklist", rng.integers(0, 1000, (4, 64))))
+assert toks.shape == (4, 64)
+tel = bank.telemetry()
+assert set(tel) == {"admission", "dedup", "blocklist"}
+for name, t in tel.items():
+    assert t["queries"] >= 1 and t["kernel_queries"] >= 1, (name, t)
+    assert t["bytes"] > 0
+# hot-swap publish point: the new artifact serves, the old stays valid
+old = bank.swap("dedup", make_filter("bloom", neg, space=space))
+assert np.asarray(bank.query("dedup", neg)).all()
+assert bank.telemetry("dedup")["version"] == 2
+print(bank.summary())
+print("multi-filter serve smoke OK")
+EOF
 echo "ci.sh: all green"

@@ -12,7 +12,8 @@ everywhere, never silently ignored.
 from .artifacts import (AdaBFArtifact, BloomArtifact, HABFArtifact,
                         LearnedArtifact, NgramArtifact, WBFArtifact,
                         XorArtifact, load_artifact)
-from .dispatch import query, query_keys
+from .dispatch import (add_query_hook, artifact_ref, query, query_keys,
+                       remove_query_hook, QueryEvent)
 from .bloom_query.ops import bloom_query
 from .habf_query.ops import habf_query
 from .ngram_blocklist.ops import (ngram_blocklist, build_blocklist,
@@ -21,7 +22,8 @@ from .wbf_query.ops import wbf_query
 from .xor_query.ops import xor_query
 
 __all__ = [
-    "query", "query_keys", "load_artifact",
+    "query", "query_keys", "load_artifact", "artifact_ref",
+    "add_query_hook", "remove_query_hook", "QueryEvent",
     "BloomArtifact", "HABFArtifact", "XorArtifact", "WBFArtifact",
     "LearnedArtifact", "AdaBFArtifact", "NgramArtifact",
     "bloom_query", "habf_query", "xor_query", "wbf_query",

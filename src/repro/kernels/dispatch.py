@@ -20,6 +20,9 @@ selects the pure-jnp reference path everywhere.
 """
 from __future__ import annotations
 
+import threading
+from typing import Callable, NamedTuple
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -125,8 +128,63 @@ def classifier_scores(model_kind: str, params, bytes_mat):
 
 
 # ---------------------------------------------------------------------------
+# query telemetry hooks
+# ---------------------------------------------------------------------------
+
+class QueryEvent(NamedTuple):
+    """One top-level `query` dispatch, as seen by telemetry hooks.
+
+    ``artifact`` is the object queried (identity-comparable — a FilterBank
+    maps it back to an entry name), ``kind`` its type name, ``path`` which
+    implementation served it ("kernel" | "ref"), and ``n`` the number of
+    probed elements (keys, or window positions for n-gram batches).
+    """
+    artifact: object
+    kind: str
+    path: str
+    n: int
+
+
+_QUERY_HOOKS: list[Callable[[QueryEvent], None]] = []
+_query_tls = threading.local()   # per-thread dispatch depth (serving threads)
+
+
+def add_query_hook(fn: Callable[[QueryEvent], None]):
+    """Register a telemetry hook fired once per *top-level* `query` call
+    (nested dispatches — e.g. a learned artifact routing its backup Bloom
+    probe back through `query` — are folded into the outer event)."""
+    _QUERY_HOOKS.append(fn)
+    return fn
+
+
+def remove_query_hook(fn: Callable[[QueryEvent], None]) -> None:
+    if fn in _QUERY_HOOKS:
+        _QUERY_HOOKS.remove(fn)
+
+
+# ---------------------------------------------------------------------------
 # the entrypoint
 # ---------------------------------------------------------------------------
+
+def artifact_ref(art, key_lo, key_hi, ks=None):
+    """Traceable membership probe over a table-backed artifact — the
+    dispatcher analogue of `query(..., use_kernel=False)` that closes over
+    into larger jitted steps (serving gates).  Learned/Ada-BF artifacts
+    need host-side featurization and are rejected; route those through
+    `query`/`query_keys` instead."""
+    if isinstance(art, BloomArtifact):
+        return bloom_artifact_ref(art, key_lo, key_hi)
+    if isinstance(art, HABFArtifact):
+        return habf_artifact_ref(art, key_lo, key_hi)
+    if isinstance(art, XorArtifact):
+        return xor_artifact_ref(art, key_lo, key_hi)
+    if isinstance(art, WBFArtifact):
+        if ks is None:
+            ks = jnp.full(key_lo.shape, art.k_fallback, jnp.int32)
+        return wbf_artifact_ref(art, key_lo, key_hi, ks)
+    raise TypeError(f"{type(art).__name__} cannot close into a jitted gate "
+                    "(needs host featurization); use query/query_keys")
+
 
 def query(artifact, key_lo, key_hi=None, *, use_kernel: bool = True,
           interpret: bool | None = None, ks=None, bytes_mat=None):
@@ -145,6 +203,25 @@ def query(artifact, key_lo, key_hi=None, *, use_kernel: bool = True,
     and is honored for every artifact type; ``use_kernel=False`` runs the
     pure-jnp reference.
     """
+    depth = getattr(_query_tls, "depth", 0)
+    _query_tls.depth = depth + 1
+    try:
+        out = _query_impl(artifact, key_lo, key_hi, use_kernel=use_kernel,
+                          interpret=interpret, ks=ks, bytes_mat=bytes_mat)
+    finally:
+        _query_tls.depth = depth
+    if depth == 0 and _QUERY_HOOKS:
+        n = int(getattr(key_lo, "size", 0))
+        # empty batches short-circuit to the jnp zeros path: no kernel ran
+        path = "kernel" if use_kernel and n else "ref"
+        ev = QueryEvent(artifact, type(artifact).__name__, path, n)
+        for fn in list(_QUERY_HOOKS):
+            fn(ev)
+    return out
+
+
+def _query_impl(artifact, key_lo, key_hi, *, use_kernel, interpret, ks,
+                bytes_mat):
     if getattr(key_lo, "size", 1) == 0:
         # empty batch: nothing to probe (the Pallas grid can't be empty)
         return jnp.zeros(getattr(key_lo, "shape", (0,)), jnp.bool_)

@@ -9,6 +9,11 @@ the skewed-cost regime of §V-F.  A false positive triggers a wasted cache
 probe, so the serving report includes the measured weighted FPR next to
 the standard BF alternative at equal memory.
 
+Both gates are entries in one `FilterBank` (admission + blocklist) and
+the canonical `serve_loop.generate` driver does the gating: decode
+window width derived from the blocklist's n, window seeded from the
+prompt tail, per-filter telemetry in the returned report.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --batch 8 --prompt-len 64 --gen 32
 """
@@ -26,8 +31,8 @@ from ..core import SpaceBudget, make_filter, weighted_fpr
 from ..core.hashing import fingerprint_bytes
 from ..kernels.ngram_blocklist.ops import build_blocklist
 from ..models.model import Model
-from ..runtime.serve_loop import (make_prefill_step, make_decode_step,
-                                  admission_probe)
+from ..runtime.filter_bank import FilterBank
+from ..runtime.serve_loop import generate
 
 
 def build_admission_filter(n_cached: int = 5000, n_missing: int = 5000,
@@ -51,19 +56,23 @@ def build_admission_filter(n_cached: int = 5000, n_missing: int = 5000,
 
 def run(arch: str = "qwen3-0.6b", reduced: bool = True, batch: int = 8,
         prompt_len: int = 64, gen: int = 32, seed: int = 0,
-        habf_gate: bool = True, blocklist: bool = True) -> dict:
+        habf_gate: bool = True, blocklist: bool = True,
+        blocklist_n: int = 4, mesh=None) -> dict:
     cfg = get_config(arch, reduced=reduced)
     model = Model(cfg)
     params, _ = model.init(jax.random.PRNGKey(seed))
     rng = np.random.default_rng(seed)
 
+    # both paper gates are entries in ONE FilterBank: mesh-aware placement
+    # + per-filter serving telemetry behind a single dispatcher
+    bank = FilterBank(mesh=mesh)
     habf, cached, missing, lengths, fstats = build_admission_filter(seed=seed)
-    gate = habf.to_artifact() if habf_gate else None
-
-    bl_art = None
+    if habf_gate:
+        bank.register("admission", habf)
     if blocklist:
-        grams = rng.integers(0, cfg.vocab, (64, 4)).astype(np.int32)
-        bl_art = build_blocklist(grams, 1 << 14, k=3)
+        grams = rng.integers(0, cfg.vocab,
+                             (64, blocklist_n)).astype(np.int32)
+        bank.register("blocklist", build_blocklist(grams, 1 << 14, k=3))
 
     n_img = cfg.n_img_tokens if cfg.family == "vlm" else 0
     total_len = prompt_len + n_img + gen + 1
@@ -83,35 +92,26 @@ def run(arch: str = "qwen3-0.6b", reduced: bool = True, batch: int = 8,
         prompt["prefix_lo"] = jnp.asarray(mix & 0xFFFFFFFF, jnp.uint32)
         prompt["prefix_hi"] = jnp.asarray(mix >> np.uint64(32), jnp.uint32)
 
-    prefill = jax.jit(make_prefill_step(model, admission=gate))
-    decode = jax.jit(make_decode_step(model, blocklist=bl_art))
-
+    # the canonical driver now does the gating: the decode window width is
+    # derived from the registered blocklist's n (was hardcoded to 4) and
+    # seeded from the prompt tail, so no zero-padded window is ever probed
     t0 = time.time()
-    out, cache = prefill(params, prompt, cache)
-    tok = out["next_token"]
-    admitted = np.asarray(out.get("admit", np.ones(batch, bool)))
-    window = jnp.zeros((batch, 4), jnp.int32)
-    blocked = 0
-    toks = [tok]
-    for i in range(gen - 1):
-        o, cache = decode(params, tok, cache, jnp.int32(prompt_len + n_img + i),
-                          window)
-        tok = o["next_token"]
-        if "blocked" in o:
-            blocked += int(np.asarray(o["blocked"]).sum())
-            window = o["window"]
-        toks.append(tok)
-    jax.block_until_ready(tok)
+    toks, cache, rep = generate(model, params, prompt, cache, gen, bank=bank)
+    jax.block_until_ready(toks)
     dt = time.time() - t0
+    admitted = rep.get("admit", np.ones(batch, bool))
     tokens_out = int(batch * gen)
+    telemetry = bank.telemetry()
+    bank.close()      # unhook from kernels.dispatch; snapshot taken above
     return {
         "tokens_per_s": tokens_out / dt,
         "latency_s": dt,
         "admitted": int(admitted.sum()),
         "batch": batch,
-        "blocked_ngrams": blocked,
+        "blocked_ngrams": rep.get("blocked_ngrams", 0),
         "filter_stats": fstats,
-        "generated": np.stack([np.asarray(t) for t in toks], axis=1),
+        "bank_telemetry": telemetry,
+        "generated": np.asarray(toks),
     }
 
 
@@ -125,10 +125,12 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--no-habf-gate", dest="habf_gate", action="store_false")
     ap.add_argument("--no-blocklist", dest="blocklist", action="store_false")
+    ap.add_argument("--blocklist-n", type=int, default=4)
     args = ap.parse_args()
     out = run(arch=args.arch, reduced=args.reduced, batch=args.batch,
               prompt_len=args.prompt_len, gen=args.gen,
-              habf_gate=args.habf_gate, blocklist=args.blocklist)
+              habf_gate=args.habf_gate, blocklist=args.blocklist,
+              blocklist_n=args.blocklist_n)
     fs = out["filter_stats"]
     print(f"served {out['batch']} requests @ {out['tokens_per_s']:.1f} tok/s; "
           f"admitted {out['admitted']}/{out['batch']}; "
@@ -136,6 +138,10 @@ def main():
     print(f"admission filter: HABF wFPR={fs['habf_weighted_fpr']:.2e} vs "
           f"BF wFPR={fs['bf_weighted_fpr']:.2e} (same memory); "
           f"zero-FNR={fs['zero_fnr']}")
+    for name, t in out["bank_telemetry"].items():
+        print(f"bank[{name}]: {t['kind']} v{t['version']} {t['bytes']}B, "
+              f"{t['keys']} keys probed, hit_rate={t['hit_rate']:.3f}, "
+              f"est_fp_cost={t['est_fp_cost']:.3g}")
 
 
 if __name__ == "__main__":

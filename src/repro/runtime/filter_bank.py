@@ -1,0 +1,321 @@
+"""`repro.runtime.filter_bank` — the multi-filter serving dispatcher.
+
+Deployments run several heterogeneous filters side by side (ROADMAP
+"multi-filter serving": an HABF admission gate, an n-gram blocklist, a
+dedup Bloom, a fingerprint Xor cache index, ...) with very different
+memory/accuracy profiles.  A `FilterBank` owns all of them for one pod:
+
+  * `register(name, filter_or_artifact)` — any of the 7 typed pytree
+    artifact kinds (or a live `Filter`, exported via `to_artifact()`).
+  * mesh-aware placement — `place(artifact, mesh, policy)` replicates
+    small tables (VMEM residency) and `jax.device_put`s the large
+    `words`/`table` arrays sharded over the `model` axis above a byte
+    threshold, reusing `runtime.sharding.spec_for` so non-dividing table
+    lengths degrade to replicated instead of erroring.
+  * one entrypoint — `bank.query(name, keys, ...)` / `bank.query_batch`
+    dispatch through `repro.kernels.query`, and `bank.artifact(name)`
+    hands the placed pytree to jitted serving steps (the fused gates in
+    `runtime.serve_loop`), whose outcomes flow back via `bank.observe`.
+  * per-filter telemetry — probe count, hit rate, estimated FP cost
+    (cost-weighted hit mass, the weighted-FPR numerator of `core.costs` /
+    paper §V-F), bytes resident, and kernel-vs-ref path counts fed by
+    `kernels.dispatch.add_query_hook` (so even direct `query_keys` calls
+    against a registered artifact are attributed).
+  * `swap(name, artifact)` — the double-buffered publish point for the
+    async-rebuild roadmap item: the new artifact is fully placed before
+    the name flips to it, and the old one is returned still-valid for
+    any in-flight jitted closures.
+"""
+from __future__ import annotations
+
+import threading
+import weakref
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import dispatch as _dispatch
+from ..kernels.artifacts import NgramArtifact, _ArtifactBase
+from ..kernels.dispatch import QueryEvent, query as _query, query_keys
+from . import sharding as sh
+
+
+@dataclass(frozen=True)
+class PlacementPolicy:
+    """Where each artifact leaf lives on the mesh.
+
+    Leaves named in ``table_fields`` (the word-packed bit tables / Xor
+    fingerprint slots — the only arrays that grow with the key set) are
+    sharded over ``axis`` once they reach ``shard_bytes``; everything
+    else (hash constants, HashExpressor cells, k-caches, classifier
+    params) is small and replicated for VMEM residency."""
+    shard_bytes: int = 1 << 20          # 1 MiB: below this, replicate
+    axis: str = "model"
+    table_fields: tuple = ("words", "table")
+
+
+def _leaf_name(path) -> str:
+    """Last attribute/dict key on a pytree path ('words', 'table', ...)."""
+    for entry in reversed(path):
+        name = getattr(entry, "name", getattr(entry, "key", None))
+        if name is not None:
+            return str(name)
+    return ""
+
+
+def _leaf_bytes(leaf) -> int:
+    return int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+
+
+def place(artifact, mesh: Mesh | None,
+          policy: PlacementPolicy | None = None):
+    """Place an artifact pytree on ``mesh`` -> (placed, report).
+
+    report = {"sharded": [leaf names], "replicated": [...], "axis": ...,
+    "bytes": total}.  With ``mesh=None`` the artifact is returned as-is
+    (single-process default placement)."""
+    policy = policy or PlacementPolicy()
+    leaves = jax.tree_util.tree_flatten_with_path(artifact)[0]
+    report = {"sharded": [], "replicated": [], "axis": policy.axis,
+              "bytes": sum(_leaf_bytes(l) for _, l in leaves)}
+    if mesh is None:
+        return artifact, report
+    rules = dict(sh.DEFAULT_RULES, filter_bits=policy.axis)
+    shardings = {}
+    for path, leaf in leaves:
+        name = _leaf_name(path)
+        if (name in policy.table_fields and leaf.ndim == 1
+                and _leaf_bytes(leaf) >= policy.shard_bytes):
+            ns = sh.spec_for(mesh, rules, ("filter_bits",), shape=leaf.shape)
+        else:
+            ns = NamedSharding(mesh, P())
+        shardings[path] = ns
+        (report["sharded"] if ns.spec else report["replicated"]).append(name)
+    placed = jax.device_put(
+        artifact, jax.tree_util.tree_map_with_path(
+            lambda p, _: shardings[p], artifact))
+    return placed, report
+
+
+def _weak_hook(bank_ref):
+    """Dispatch hook holding only a weakref to the bank, so an unclosed
+    bank is still collectable; the hook unregisters itself once dead."""
+    def hook(ev):
+        bank = bank_ref()
+        if bank is None:
+            _dispatch.remove_query_hook(hook)
+            return
+        bank._on_query(ev)
+    return hook
+
+
+@dataclass
+class _Entry:
+    name: str
+    artifact: object
+    placement: dict
+    policy: PlacementPolicy | None = None   # per-entry override, kept by swap
+    version: int = 1
+    queries: int = 0            # bank.query / observe calls
+    keys: int = 0               # total elements probed
+    hits: int = 0
+    est_fp_cost: float = 0.0    # cost-weighted hit mass (§V-F numerator)
+    kernel_queries: int = 0     # dispatch path attribution (query hook)
+    ref_queries: int = 0
+    fused_queries: int = 0      # probes fused into jitted serving steps
+
+    def telemetry(self) -> dict:
+        return {
+            "kind": type(self.artifact).__name__,
+            "version": self.version,
+            "bytes": self.placement["bytes"],
+            "placement": {k: self.placement[k]
+                          for k in ("sharded", "replicated", "axis")},
+            "queries": self.queries, "keys": self.keys, "hits": self.hits,
+            "hit_rate": self.hits / self.keys if self.keys else 0.0,
+            "est_fp_cost": self.est_fp_cost,
+            "kernel_queries": self.kernel_queries,
+            "ref_queries": self.ref_queries,
+            "fused_queries": self.fused_queries,
+        }
+
+
+class FilterBank:
+    """Registry + dispatcher + telemetry for every filter one pod serves."""
+
+    def __init__(self, mesh: Mesh | None = None,
+                 policy: PlacementPolicy | None = None, *,
+                 use_kernel: bool = True, interpret: bool | None = None):
+        self.mesh = mesh
+        self.policy = policy or PlacementPolicy()
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self._entries: dict[str, _Entry] = {}
+        self._by_artifact: dict[int, _Entry] = {}
+        self._lock = threading.Lock()
+        self._pending: list = []   # (entry, device hits, costs) not yet
+                                   # accounted — drained at telemetry time
+        self._hook = _weak_hook(weakref.ref(self))
+        _dispatch.add_query_hook(self._hook)
+
+    # -- registry ------------------------------------------------------------
+    def register(self, name: str, filt, *, policy=None):
+        """Place and register an artifact (or a live `Filter`, exported
+        first).  Returns the placed artifact.  A per-entry ``policy``
+        override sticks to the entry and is reused by `swap`."""
+        art = filt if isinstance(filt, _ArtifactBase) else filt.to_artifact()
+        placed, rep = place(art, self.mesh, policy or self.policy)
+        with self._lock:
+            if name in self._entries:
+                raise ValueError(f"filter {name!r} already registered; "
+                                 "use swap() to publish a new version")
+            e = _Entry(name, placed, rep, policy=policy)
+            self._entries[name] = e
+            self._by_artifact[id(placed)] = e
+        return placed
+
+    def swap(self, name: str, filt):
+        """Double-buffered publish: fully place the new artifact (under
+        the entry's registration-time policy), then atomically point
+        ``name`` at it.  Returns the *old* artifact, which stays valid
+        for in-flight jitted closures (the async rebuild's hot-swap
+        point)."""
+        art = filt if isinstance(filt, _ArtifactBase) else filt.to_artifact()
+        pol = self._entries[name].policy or self.policy
+        placed, rep = place(art, self.mesh, pol)           # buffer B built
+        with self._lock:
+            e = self._entries[name]                        # then flip
+            old = e.artifact
+            self._by_artifact.pop(id(old), None)
+            e.artifact, e.placement = placed, rep
+            e.version += 1
+            self._by_artifact[id(placed)] = e
+        return old
+
+    def artifact(self, name: str):
+        """The placed artifact — close it over into jitted serving steps."""
+        return self._entries[name].artifact
+
+    def names(self) -> list[str]:
+        return list(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    # -- serving entrypoints -------------------------------------------------
+    def query(self, name: str, keys, *, costs=None, use_kernel=None,
+              interpret=None, **kw):
+        """Serve one membership query batch against filter ``name``.
+
+        ``keys``: uint64 fingerprints or strings (learned filters) — or a
+        (B, T) int32 token batch for an `NgramArtifact`.  ``costs``
+        optionally weights the telemetry FP-cost estimate (and the WBF
+        query-side k recovery, as in `query_keys`)."""
+        e = self._entries[name]
+        uk = self.use_kernel if use_kernel is None else use_kernel
+        ip = self.interpret if interpret is None else interpret
+        if isinstance(e.artifact, NgramArtifact):
+            out = _query(e.artifact, jnp.asarray(keys, jnp.int32),
+                         use_kernel=uk, interpret=ip, **kw)
+        else:
+            out = query_keys(e.artifact, keys, use_kernel=uk, interpret=ip,
+                             costs=costs, **kw)
+        # hit/cost accounting is deferred to telemetry time: forcing the
+        # device result to host here would put a sync point on the
+        # serving hot path
+        with self._lock:
+            self._pending.append((e, out, costs))
+        return out
+
+    def query_batch(self, requests: dict, **kw) -> dict:
+        """Serve several filters in one call: {name: keys} -> {name: hits}."""
+        return {name: self.query(name, keys, **kw)
+                for name, keys in requests.items()}
+
+    def observe(self, name: str, hits, costs=None) -> None:
+        """Account a probe outcome that happened *inside* a jitted serving
+        step (the fused admission/blocklist gates of `serve_loop`), where
+        the bank never saw the dispatch."""
+        self._account(self._entries[name], np.asarray(hits), costs,
+                      fused=True, count_query=True)
+
+    def _account(self, e: _Entry, hits: np.ndarray, costs, *, fused: bool,
+                 count_query: bool) -> None:
+        """keys/hits/est_fp_cost move together so hit_rate stays a true
+        ratio over the probes the bank accounted (bank.query + observe);
+        direct dispatches show up in queries/path counters only."""
+        hits = hits.astype(bool)
+        n_hits = int(hits.sum())
+        cost = (float((np.asarray(costs, np.float64) * hits.ravel()).sum())
+                if costs is not None else float(n_hits))
+        with self._lock:
+            if count_query:
+                e.queries += 1
+            if fused:
+                e.fused_queries += 1
+            e.keys += int(hits.size)
+            e.hits += n_hits
+            e.est_fp_cost += cost
+
+    def _on_query(self, ev: QueryEvent) -> None:
+        """`kernels.dispatch` hook: attribute kernel-vs-ref path for any
+        top-level query against a registered artifact.  Keys/hits are NOT
+        counted here — the hook never sees the query outcome, and adding
+        keys without hits would dilute hit_rate."""
+        e = self._by_artifact.get(id(ev.artifact))
+        if e is None:
+            return
+        with self._lock:
+            e.queries += 1
+            if ev.path == "kernel":
+                e.kernel_queries += 1
+            else:
+                e.ref_queries += 1
+
+    def _drain(self) -> None:
+        """Realize deferred bank.query outcomes (one host transfer each,
+        off the serving hot path)."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for e, out, costs in pending:
+            self._account(e, np.asarray(out), costs, fused=False,
+                          count_query=False)
+
+    # -- telemetry -----------------------------------------------------------
+    def telemetry(self, name: str | None = None) -> dict:
+        self._drain()
+        if name is not None:
+            return self._entries[name].telemetry()
+        return {n: e.telemetry() for n, e in self._entries.items()}
+
+    def summary(self) -> str:
+        """Human-readable per-filter serving table."""
+        self._drain()
+        hdr = (f"{'name':<12} {'kind':<16} {'ver':>3} {'bytes':>10} "
+               f"{'queries':>8} {'keys':>10} {'hit_rate':>8} "
+               f"{'fp_cost':>10} {'krnl/ref/fused':>14}  placement")
+        lines = [hdr]
+        for n, e in self._entries.items():
+            t = e.telemetry()
+            pl = (f"shard[{','.join(t['placement']['sharded'])}]"
+                  f"@{t['placement']['axis']}"
+                  if t["placement"]["sharded"] else "replicated")
+            lines.append(
+                f"{n:<12} {t['kind']:<16} {t['version']:>3} "
+                f"{t['bytes']:>10} {t['queries']:>8} {t['keys']:>10} "
+                f"{t['hit_rate']:>8.4f} {t['est_fp_cost']:>10.3g} "
+                f"{t['kernel_queries']:>4}/{t['ref_queries']}/"
+                f"{t['fused_queries']:<5}  {pl}")
+        return "\n".join(lines)
+
+    def close(self) -> None:
+        _dispatch.remove_query_hook(self._hook)
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

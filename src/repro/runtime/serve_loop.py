@@ -1,38 +1,43 @@
 """Serving step builders: batched prefill + decode with the paper's HABF
 integrated as a first-class admission/blocklist gate (DESIGN.md §2).
 
-  * prefill: optional HABF *admission probe* — the two-round query (pure
-    jnp form, lowers on any backend; the Pallas kernel is the TPU runtime
-    path) over the batch's prefix fingerprints against the pod-local
-    KV-prefix-cache index.  A hit means the prefix KV is resident; a false
-    positive costs a wasted cache probe + re-prefill — the weighted-FPR
-    cost the paper minimizes.
+  * prefill: optional *admission probe* — a traceable membership query
+    (pure jnp form, lowers on any backend; the Pallas kernel is the TPU
+    runtime path) over the batch's prefix fingerprints against the
+    pod-local KV-prefix-cache index.  A hit means the prefix KV is
+    resident; a false positive costs a wasted cache probe + re-prefill —
+    the weighted-FPR cost the paper minimizes.  Any table-backed artifact
+    serves (HABF/Bloom/Xor/WBF — see `kernels.dispatch.artifact_ref`).
   * decode: optional fused n-gram blocklist probe on the trailing window
     of emitted tokens.
 
-Both gates take typed pytree artifacts (`HABFArtifact` / `NgramArtifact`,
-see repro.kernels.artifacts): a few MB of replicated, VMEM-resident filter
-tables that close over into the jitted steps — and, being pytrees, can be
-`jax.device_put` with a sharding, donated, or hot-swapped from an npz.
+Both gates take typed pytree artifacts (see repro.kernels.artifacts):
+a few MB of replicated, VMEM-resident filter tables that close over into
+the jitted steps — and, being pytrees, can be `jax.device_put` with a
+sharding, donated, or hot-swapped from an npz.  A `FilterBank`
+(repro.runtime.filter_bank) serves both gates as two named entries with
+placement + telemetry; `generate(..., bank=bank)` routes through it.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..kernels.artifacts import HABFArtifact, NgramArtifact
-from ..kernels.dispatch import habf_artifact_ref
+from ..kernels.artifacts import NgramArtifact
+from ..kernels.dispatch import artifact_ref
 from ..kernels.ngram_blocklist.ref import ngram_fingerprints
 from ..kernels.common import probe_bits, hash_value, fastrange
 from ..models.model import Model
 
 
-def admission_probe(gate: HABFArtifact, prefix_lo, prefix_hi):
-    """Traceable two-round HABF probe; usable inside jitted steps."""
-    return habf_artifact_ref(gate, prefix_lo, prefix_hi)
+def admission_probe(gate, prefix_lo, prefix_hi):
+    """Traceable admission probe; usable inside jitted steps.  Accepts any
+    table-backed artifact (HABF/Bloom/Xor/WBF), not just HABF."""
+    return artifact_ref(gate, prefix_lo, prefix_hi)
 
 
-def make_prefill_step(model: Model, admission: HABFArtifact | None = None):
+def make_prefill_step(model: Model, admission=None):
     def prefill_step(params, batch, cache):
         logits, cache = model.prefill(params, batch, cache)
         out = {"next_token": jnp.argmax(logits, axis=-1).astype(jnp.int32)}
@@ -44,45 +49,183 @@ def make_prefill_step(model: Model, admission: HABFArtifact | None = None):
     return prefill_step
 
 
-def make_decode_step(model: Model, blocklist: NgramArtifact | None = None):
-    """decode_step(params, tokens, cache, pos[, last_window]) -> out, cache.
-    last_window: (B, blocklist.n) trailing tokens incl. the new one, for
-    the fused blocklist probe."""
+def blocklist_probe(blocklist: NgramArtifact, window):
+    """Traceable probe of one (B, n) token window against the blocklist
+    (the fused decode-gate body, shared with the boundary probe)."""
+    lo, hi = ngram_fingerprints(window, blocklist.n)
+    acc = jnp.ones(lo[:, -1].shape, jnp.uint32)
+    for j in range(blocklist.k):
+        hv = hash_value(lo[:, -1], hi[:, -1], blocklist.c1[j],
+                        blocklist.c2[j], blocklist.mul[j])
+        acc = acc & probe_bits(blocklist.words, fastrange(hv, blocklist.m))
+    return acc.astype(jnp.bool_)
 
-    def decode_step(params, tokens, cache, pos, last_window=None):
+
+def make_decode_step(model: Model, blocklist: NgramArtifact | None = None):
+    """decode_step(params, tokens, cache, pos[, last_window, window_fill])
+    -> out, cache.
+
+    Window contract: ``last_window`` is the (B, n) trailing token window
+    ending at ``tokens`` — the *previous* step's emission — NOT including
+    this step's new token.  The step shifts it left and appends the token
+    it just generated, so the probed window ends at the new token; the
+    updated window comes back as ``out["window"]`` for the next step.
+
+    ``window_fill`` (scalar or per-row (B,) int32, optional) counts how
+    many trailing entries of ``last_window`` are real tokens.  When
+    given, the probe is
+    masked until the shifted window holds n real tokens, so left-padding
+    (token id 0) can never spuriously match blocklist entries containing
+    token 0; the updated count comes back as ``out["window_fill"]``.
+    Callers that seed the window from the prompt tail (see
+    ``seed_window``) start full and pay no masked steps."""
+
+    def decode_step(params, tokens, cache, pos, last_window=None,
+                    window_fill=None):
         logits, cache = model.decode(params, tokens, cache, pos)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = {"next_token": nxt}
         if blocklist is not None and last_window is not None:
             win = jnp.concatenate([last_window[:, 1:], nxt[:, None]], axis=1)
-            lo, hi = ngram_fingerprints(win, blocklist.n)
-            acc = jnp.ones(lo[:, -1].shape, jnp.uint32)
-            for j in range(blocklist.k):
-                hv = hash_value(lo[:, -1], hi[:, -1], blocklist.c1[j],
-                                blocklist.c2[j], blocklist.mul[j])
-                acc = acc & probe_bits(blocklist.words,
-                                       fastrange(hv, blocklist.m))
-            out["blocked"] = acc.astype(jnp.bool_)
+            blocked = blocklist_probe(blocklist, win)
+            if window_fill is not None:
+                filled = jnp.minimum(window_fill + 1, blocklist.n)
+                blocked = blocked & (filled >= blocklist.n)
+                out["window_fill"] = filled
+            out["blocked"] = blocked
             out["window"] = win
         return out, cache
 
+    # generate() reads this to coordinate window threading with a
+    # caller-supplied step (the gate is baked into the closure)
+    decode_step.blocklist = blocklist
     return decode_step
 
 
+def seed_window(prompt_tokens, first_token, n: int, prompt_lens=None):
+    """Initial (last_window, window_fill) for the decode loop: the window
+    ends at the prefill's first emitted token, preceded by the trailing
+    n-1 prompt tokens (so n-grams spanning the prompt/generation boundary
+    are caught), left-padded with zeros when the prompt is shorter.
+
+    ``prompt_lens`` (B,) gives the number of *real* trailing tokens per
+    row for ragged, left-padded prompt batches; the returned fill is then
+    per-row, so padded rows stay probe-masked until their window holds n
+    real tokens.  Without it every prompt token counts as real."""
+    prompt_tokens = jnp.asarray(prompt_tokens, jnp.int32)
+    T = prompt_tokens.shape[1]
+    tail = prompt_tokens[:, T - min(T, n - 1):]
+    pad = n - 1 - tail.shape[1]
+    if pad:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0)))
+    win = jnp.concatenate([tail, first_token[:, None].astype(jnp.int32)],
+                          axis=1)
+    if prompt_lens is None:
+        return win, jnp.int32(min(T, n - 1) + 1)
+    fill = jnp.minimum(jnp.asarray(prompt_lens, jnp.int32), n - 1) + 1
+    return win, fill
+
+
+def _resolve_gate(bank, explicit, default_name: str):
+    """Gate resolution for `generate` -> (artifact | None, bank entry name
+    | None): an artifact wins outright; a string names a bank entry; with
+    just a bank, the conventional entry name is used when present.  The
+    resolved name is what telemetry outcomes are accounted to."""
+    if explicit is not None and not isinstance(explicit, str):
+        return explicit, None
+    if bank is None:
+        if isinstance(explicit, str):
+            raise ValueError(f"gate {explicit!r} named by string but no "
+                             "FilterBank was given")
+        return None, None
+    if isinstance(explicit, str):
+        return bank.artifact(explicit), explicit    # KeyError if missing
+    if default_name in bank:
+        return bank.artifact(default_name), default_name
+    return None, None
+
+
 def generate(model: Model, params, prompt_batch: dict, cache, steps: int,
-             decode_step=None, pos0: int | None = None):
-    """Greedy generation driver (host loop; each step jit-compiled once)."""
-    decode_step = decode_step or make_decode_step(model)
-    prefill = jax.jit(make_prefill_step(model))
+             *, bank=None, admission=None, blocklist=None, decode_step=None,
+             pos0: int | None = None, prompt_lens=None):
+    """Greedy generation driver (host loop; each step jit-compiled once).
+
+    Gates: pass artifacts directly (``admission=``, ``blocklist=``) or a
+    `FilterBank` (entries named "admission" / "blocklist" by convention;
+    pass a string to pick a different entry).  Both gates are live in the
+    loop: the prefill step probes the admission filter and the decode
+    steps thread the trailing token window (seeded from the prompt tail)
+    through the fused blocklist probe.  For ragged, left-padded prompt
+    batches pass ``prompt_lens`` (B,) so padded rows stay probe-masked
+    (see ``seed_window``).  A caller-supplied ``decode_step`` must carry
+    the same blocklist (build it with `make_decode_step`).
+
+    Returns ``(tokens (B, steps), cache, report)`` where report carries
+    per-request gate outcomes: ``admit`` (B,) bool, ``blocked``
+    (B, steps) bool — column i flags the n-gram ending at tokens[:, i],
+    so the boundary gram ending at the prefill's first emission is probed
+    too — and ``blocked_ngrams`` total.  Gate outcomes are accounted into
+    the bank entry they resolved from when a bank is given.
+    """
+    adm, adm_name = _resolve_gate(bank, admission, "admission")
+    bl, bl_name = _resolve_gate(bank, blocklist, "blocklist")
+    if decode_step is None:
+        decode_step = make_decode_step(model, blocklist=bl)
+    else:
+        # coordinate with the gate baked into a caller-supplied step: a
+        # step built with its own blocklist keeps its gate live (the
+        # window is threaded for it); a gateless step cannot serve a
+        # resolved blocklist — fail loudly instead of probing nothing
+        step_bl = getattr(decode_step, "blocklist", None)
+        if step_bl is not None:
+            if bl is not None and step_bl is not bl:
+                raise ValueError(
+                    "decode_step was built with a different blocklist "
+                    "artifact than the one resolved from bank/blocklist=")
+            if bl is None:
+                bl, bl_name = step_bl, None
+        elif bl is not None:
+            raise ValueError(
+                "a blocklist gate was resolved but decode_step was built "
+                "without one; build it with make_decode_step(model, "
+                "blocklist=...) or drop the decode_step argument")
+    prefill = jax.jit(make_prefill_step(model, admission=adm))
     out, cache = prefill(params, prompt_batch, cache)
     tok = out["next_token"]
+    report: dict = {}
+    if "admit" in out:
+        report["admit"] = np.asarray(out["admit"])
     T = prompt_batch["tokens"].shape[1]
     if pos0 is None:
         pos0 = T + (model.cfg.n_img_tokens if model.cfg.family == "vlm" else 0)
+    window = fill = None
+    blocked_cols = []
+    if bl is not None:
+        window, fill = seed_window(prompt_batch["tokens"], tok, bl.n,
+                                   prompt_lens=prompt_lens)
+        # the seeded window already ends at a generated token: probe it so
+        # boundary-spanning n-grams ending at the first emission are caught
+        blocked_cols.append(blocklist_probe(bl, window)
+                            & (fill >= bl.n))
     dstep = jax.jit(decode_step)
     toks = [tok]
     for i in range(steps - 1):
-        out, cache = dstep(params, tok, cache, jnp.int32(pos0 + i))
+        if window is not None:
+            out, cache = dstep(params, tok, cache, jnp.int32(pos0 + i),
+                               window, fill)
+            window, fill = out["window"], out["window_fill"]
+            blocked_cols.append(out["blocked"])
+        else:
+            out, cache = dstep(params, tok, cache, jnp.int32(pos0 + i))
         tok = out["next_token"]
         toks.append(tok)
-    return jnp.stack(toks, axis=1), cache
+    if bl is not None:
+        # single device->host transfer after the loop (no per-step sync)
+        report["blocked"] = np.asarray(jnp.stack(blocked_cols, axis=1))
+        report["blocked_ngrams"] = int(report["blocked"].sum())
+    if bank is not None:
+        if "admit" in report and adm_name is not None:
+            bank.observe(adm_name, report["admit"])
+        if "blocked" in report and bl_name is not None:
+            bank.observe(bl_name, report["blocked"])
+    return jnp.stack(toks, axis=1), cache, report

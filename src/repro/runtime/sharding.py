@@ -36,6 +36,8 @@ DEFAULT_RULES: dict[str, Any] = {
     "frames": None,
     "kv_seq": None,              # KV-cache storage seq dim (decode/prefill
                                  # rules map it to "model": split-KV)
+    "filter_bits": "model",      # big filter tables (words/table arrays):
+                                 # FilterBank placement shards them over TP
 }
 
 # sequence-parallel rule swap: shard long sequences over the model axis

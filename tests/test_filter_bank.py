@@ -1,0 +1,338 @@
+"""FilterBank: multi-filter dispatcher, placement, telemetry, swap — and
+the serve-loop gate regression tests (the formerly dead `generate` wiring
+must fire)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SpaceBudget, make_filter, zipf_costs
+from repro.kernels import build_blocklist, query_keys
+from repro.runtime.filter_bank import FilterBank, PlacementPolicy, place
+
+
+def _keysets(seed=0, n=4000):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(np.uint64(1) << np.uint64(62), 2 * n,
+                      replace=False).astype(np.uint64)
+    return keys[:n], keys[n:]
+
+
+@pytest.fixture()
+def bank3():
+    """A bank serving 3 heterogeneous artifact types + an n-gram entry."""
+    pos, neg = _keysets()
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    habf = make_filter("habf", pos, neg, zipf_costs(len(neg), 1.0, 1),
+                       space=space, seed=0)
+    bloom = make_filter("bloom", pos, space=space)
+    xor = make_filter("xor", pos, space=space)
+    bank = FilterBank()
+    bank.register("admission", habf)
+    bank.register("dedup", bloom)
+    bank.register("cache", xor)
+    rng = np.random.default_rng(3)
+    bank.register("blocklist", build_blocklist(
+        rng.integers(0, 1000, (32, 4)).astype(np.int32), 1 << 14, k=3))
+    yield bank, {"admission": habf, "dedup": bloom, "cache": xor}, pos, neg
+    bank.close()
+
+
+def test_bank_serves_three_types_one_entrypoint(bank3):
+    bank, filters, pos, neg = bank3
+    probe = np.concatenate([pos[:500], neg[:500]])
+    for name, filt in filters.items():
+        hits = np.asarray(bank.query(name, probe))
+        np.testing.assert_array_equal(hits, filt.query(probe))
+        t = bank.telemetry(name)
+        assert t["queries"] == 1 and t["keys"] == len(probe)
+        assert t["kernel_queries"] == 1 and t["ref_queries"] == 0
+        assert t["hits"] == int(filt.query(probe).sum())
+        assert 0.0 < t["hit_rate"] < 1.0
+        assert t["bytes"] > 0
+    # the ngram entry is served behind the same entrypoint
+    toks = np.random.default_rng(4).integers(0, 1000, (4, 64))
+    out = np.asarray(bank.query("blocklist", toks))
+    assert out.shape == (4, 64)
+    assert bank.telemetry("blocklist")["keys"] == 4 * 64
+
+
+def test_bank_query_batch_and_path_attribution(bank3):
+    bank, filters, pos, neg = bank3
+    out = bank.query_batch({"dedup": pos[:100], "cache": neg[:100]},
+                           use_kernel=False)
+    assert np.asarray(out["dedup"]).all()            # zero FNR
+    assert bank.telemetry("dedup")["ref_queries"] == 1
+    assert bank.telemetry("cache")["ref_queries"] == 1
+    # a direct query_keys against the registered artifact is attributed
+    # to the entry via the dispatch telemetry hook
+    query_keys(bank.artifact("dedup"), pos[:50])
+    t = bank.telemetry("dedup")
+    assert t["queries"] == 2 and t["kernel_queries"] == 1
+    # ...but keys/hits stay a matched pair (the hook never sees outcomes,
+    # so direct dispatches must not dilute hit_rate)
+    assert t["keys"] == 100
+    assert t["hit_rate"] == t["hits"] / 100
+
+
+def test_bank_estimated_fp_cost(bank3):
+    bank, filters, pos, neg = bank3
+    costs = zipf_costs(len(neg), 1.5, 7)
+    hits = np.asarray(bank.query("dedup", neg, costs=costs))
+    t = bank.telemetry("dedup")
+    # est FP cost = cost-weighted hit mass (the weighted-FPR numerator):
+    # every hit on a negative stream is a false positive
+    assert t["est_fp_cost"] == pytest.approx((costs * hits).sum())
+
+
+def test_bank_swap_double_buffered(bank3):
+    bank, filters, pos, neg = bank3
+    space = SpaceBudget.from_bits_per_key(10, len(neg))
+    old = bank.swap("dedup", make_filter("bloom", neg, space=space))
+    # old artifact returned intact for in-flight closures
+    assert np.asarray(query_keys(old, pos[:200])).all()
+    # the name now serves the new key set
+    assert np.asarray(bank.query("dedup", neg[:200])).all()
+    t = bank.telemetry("dedup")
+    assert t["version"] == 2
+    with pytest.raises(ValueError):
+        bank.register("dedup", make_filter("bloom", pos, space=space))
+
+
+def test_bank_placement_shards_large_replicates_small():
+    pos, _ = _keysets(1)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # tiny threshold: the words table crosses it, the hash constants don't
+    bank = FilterBank(mesh=mesh, policy=PlacementPolicy(shard_bytes=1024))
+    space = SpaceBudget.from_bits_per_key(10, len(pos))
+    bf = make_filter("bloom", pos, space=space)
+    bank.register("dedup", bf)
+    t = bank.telemetry("dedup")
+    assert t["placement"]["sharded"] == ["words"]
+    assert set(t["placement"]["replicated"]) == {"c1", "c2", "mul"}
+    # small filter below the threshold: fully replicated
+    small = make_filter("bloom", pos[:100],
+                        space=SpaceBudget.from_bits_per_key(8, 100))
+    bank.register("small", small)
+    assert bank.telemetry("small")["placement"]["sharded"] == []
+    # placed artifacts still answer identically to the host filters
+    np.testing.assert_array_equal(
+        np.asarray(bank.query("dedup", pos[:300])), bf.query(pos[:300]))
+    bank.close()
+
+
+def test_place_report_and_none_mesh():
+    pos, _ = _keysets(2, n=1000)
+    art = make_filter("bloom", pos,
+                      space=SpaceBudget.from_bits_per_key(10, len(pos))
+                      ).to_artifact()
+    placed, rep = place(art, None)
+    assert placed is art and rep["sharded"] == []
+    assert rep["bytes"] == sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(art))
+
+
+# ---------------------------------------------------------------------------
+# serve-loop regressions: the gates must actually fire under `generate`
+# ---------------------------------------------------------------------------
+
+def _tiny_model(batch=2, prompt_len=8, steps=6, seed=0):
+    from repro.configs import get_config
+    from repro.models.model import Model
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    prompt = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (batch, prompt_len)), jnp.int32)}
+    cache = model.init_cache(batch, prompt_len + steps + 1)
+    return cfg, model, params, prompt, cache
+
+
+def test_generate_blocklist_regression_fires():
+    """A blocklisted n-gram of the model's own (deterministic, greedy)
+    output must be reported `blocked` by `generate` — the wiring that used
+    to be dead code (gates ignored, window never threaded)."""
+    from repro.runtime.serve_loop import generate
+    B, P, S, n = 2, 8, 6, 4
+    cfg, model, params, prompt, cache = _tiny_model(B, P, S)
+    toks, _, rep = generate(model, params, prompt, cache, S)
+    assert rep == {}                       # no gates -> empty report
+    seq = np.concatenate([np.asarray(prompt["tokens"]), np.asarray(toks)],
+                         axis=1)
+    # blocked[:, j] flags the n-gram ending at generated token j, i.e. at
+    # seq position P + j; blocklist two grams — one ending mid-stream and
+    # one spanning the prompt/generation boundary (ends at the prefill
+    # emission, j=0)
+    j = 2
+    grams = np.stack([seq[0, P + j + 1 - n: P + j + 1],
+                      seq[0, P + 1 - n: P + 1]])
+    bank = FilterBank()
+    bank.register("blocklist", build_blocklist(grams, 1 << 14, k=3))
+    cache2 = model.init_cache(B, P + S + 1)
+    toks2, _, rep2 = generate(model, params, prompt, cache2, S, bank=bank)
+    np.testing.assert_array_equal(np.asarray(toks2), np.asarray(toks))
+    assert rep2["blocked"].shape == (B, S)
+    assert rep2["blocked"][0, j], "blocklisted n-gram not reported blocked"
+    assert rep2["blocked"][0, 0], "boundary-spanning n-gram not blocked"
+    assert rep2["blocked_ngrams"] >= 2
+    # the outcome is accounted into the bank's telemetry
+    t = bank.telemetry("blocklist")
+    assert t["fused_queries"] == 1 and t["hits"] == rep2["blocked_ngrams"]
+    bank.close()
+
+
+def test_generate_string_named_gate_telemetry():
+    """Gates named by string resolve to that bank entry — and the outcome
+    is accounted to the entry actually used, not a hardcoded name."""
+    from repro.runtime.serve_loop import generate
+    B, P, S = 2, 8, 4
+    cfg, model, params, prompt, cache = _tiny_model(B, P, S)
+    bank = FilterBank()
+    bank.register("toxic_bl", build_blocklist(
+        np.arange(16).reshape(4, 4).astype(np.int32), 1 << 14, k=3))
+    toks, _, rep = generate(model, params, prompt, cache, S, bank=bank,
+                            blocklist="toxic_bl")
+    assert rep["blocked"].shape == (B, S)
+    t = bank.telemetry("toxic_bl")
+    assert t["fused_queries"] == 1 and t["keys"] == B * S
+    bank.close()
+
+
+def test_generate_admission_regression_fires():
+    """The admission gate must probe under `generate` (it used to be
+    ignored: prefill was hardwired gateless)."""
+    from repro.runtime.serve_loop import generate
+    B = 4
+    cfg, model, params, prompt, cache = _tiny_model(batch=B)
+    pos, neg = _keysets(5, n=2000)
+    habf = make_filter("habf", pos, neg, zipf_costs(len(neg), 1.0, 1),
+                       space=SpaceBudget.from_bits_per_key(10, len(pos)),
+                       seed=0)
+    mix = np.concatenate([pos[:B // 2], neg[:B - B // 2]])
+    prompt["prefix_lo"] = jnp.asarray(mix & 0xFFFFFFFF, jnp.uint32)
+    prompt["prefix_hi"] = jnp.asarray(mix >> np.uint64(32), jnp.uint32)
+    bank = FilterBank()
+    bank.register("admission", habf)
+    toks, _, rep = generate(model, params, prompt, cache, 4, bank=bank)
+    np.testing.assert_array_equal(rep["admit"], habf.query(mix))
+    assert rep["admit"][: B // 2].all()    # zero FNR on the cached half
+    assert bank.telemetry("admission")["fused_queries"] == 1
+    bank.close()
+
+
+def test_decode_zero_padding_masked():
+    """A blocklist entry colliding with the zero left-padding must NOT
+    fire while the window is still filling — and without the fill mask it
+    would have (the bug this pins down)."""
+    from repro.runtime.serve_loop import make_decode_step
+    B, P, n = 2, 8, 4
+    cfg, model, params, prompt, cache = _tiny_model(B, P)
+    from repro.runtime.serve_loop import make_prefill_step
+    out, cache = jax.jit(make_prefill_step(model))(params, prompt, cache)
+    tok0 = out["next_token"]
+    # learn the first decode emission, then blocklist the padded window
+    # [0, 0, tok0, tok1] that the first decode step will probe
+    step_plain = jax.jit(make_decode_step(model))
+    o, _ = step_plain(params, tok0, cache, jnp.int32(P))
+    tok1 = o["next_token"]
+    gram = np.array([[0, 0, int(tok0[0]), int(tok1[0])]], np.int32)
+    bl = build_blocklist(gram, 1 << 14, k=3)
+    step = jax.jit(make_decode_step(model, blocklist=bl))
+    window = jnp.zeros((B, n), jnp.int32).at[:, -1].set(tok0)
+    # without the fill mask the zero-padded window spuriously matches
+    o_buggy, _ = step(params, tok0, cache, jnp.int32(P), window)
+    assert bool(o_buggy["blocked"][0]), "collision fixture did not collide"
+    # with window_fill=1 (only tok0 is real) the probe is masked
+    o_fixed, _ = step(params, tok0, cache, jnp.int32(P), window,
+                      jnp.int32(1))
+    assert not o_fixed["blocked"].any()
+    assert int(o_fixed["window_fill"]) == 2
+    # once the window genuinely fills, real hits still fire: walk fills
+    # forward and confirm the mask opens at n valid tokens
+    fill = jnp.int32(n - 1)
+    o_full, _ = step(params, tok0, cache, jnp.int32(P), window, fill)
+    assert int(o_full["window_fill"]) == n
+    np.testing.assert_array_equal(np.asarray(o_full["blocked"]),
+                                  np.asarray(o_buggy["blocked"]))
+
+
+def test_decode_window_shift_contract():
+    """`last_window` ends at the *previous* token; the step shifts left
+    and appends its own emission (the docstring used to claim the caller
+    had already appended it)."""
+    from repro.runtime.serve_loop import make_decode_step, seed_window
+    B, P, n = 2, 8, 4
+    cfg, model, params, prompt, cache = _tiny_model(B, P)
+    from repro.runtime.serve_loop import make_prefill_step
+    out, cache = jax.jit(make_prefill_step(model))(params, prompt, cache)
+    tok0 = out["next_token"]
+    window, fill = seed_window(prompt["tokens"], tok0, n)
+    # seeded window = trailing n-1 prompt tokens + the prefill emission
+    np.testing.assert_array_equal(
+        np.asarray(window),
+        np.concatenate([np.asarray(prompt["tokens"])[:, -(n - 1):],
+                        np.asarray(tok0)[:, None]], axis=1))
+    assert int(fill) == n
+    bl = build_blocklist(np.zeros((1, n), np.int32), 1 << 14, k=3)
+    step = jax.jit(make_decode_step(model, blocklist=bl))
+    o, _ = step(params, tok0, cache, jnp.int32(P), window, fill)
+    np.testing.assert_array_equal(
+        np.asarray(o["window"]),
+        np.concatenate([np.asarray(window)[:, 1:],
+                        np.asarray(o["next_token"])[:, None]], axis=1))
+
+
+def test_seed_window_short_prompt_pads_and_counts():
+    from repro.runtime.serve_loop import seed_window
+    prompt = jnp.asarray([[7, 9]], jnp.int32)          # T=2 < n-1=4
+    tok0 = jnp.asarray([3], jnp.int32)
+    win, fill = seed_window(prompt, tok0, n=5)
+    np.testing.assert_array_equal(np.asarray(win), [[0, 0, 7, 9, 3]])
+    assert int(fill) == 3
+
+
+def test_seed_window_ragged_prompts_per_row_fill():
+    """Left-padded ragged batches get a per-row fill, so padded rows stay
+    probe-masked until their window holds n real tokens."""
+    from repro.runtime.serve_loop import blocklist_probe, seed_window
+    n = 4
+    # row 0 has only 2 real tokens (left-padded with id 0), row 1 is full
+    prompt = jnp.asarray([[0, 0, 0, 5, 6], [1, 2, 3, 4, 5]], jnp.int32)
+    tok0 = jnp.asarray([7, 7], jnp.int32)
+    win, fill = seed_window(prompt, tok0, n, prompt_lens=[2, 5])
+    np.testing.assert_array_equal(np.asarray(fill), [3, n])
+    # a blocklist entry colliding with row 0's padded window [0,5,6,7]
+    bl = build_blocklist(np.asarray([[0, 5, 6, 7]], np.int32), 1 << 14, k=3)
+    raw = np.asarray(blocklist_probe(bl, win))
+    assert raw[0], "collision fixture did not collide"
+    masked = raw & (np.asarray(fill) >= n)
+    assert not masked[0] and int(fill[1]) == n   # row 0 masked, row 1 live
+
+
+def test_generate_caller_decode_step_coordination():
+    """A caller-built decode step keeps its baked-in gate live under
+    generate, and a gateless step cannot silently swallow a resolved
+    blocklist."""
+    from repro.runtime.serve_loop import generate, make_decode_step
+    B, P, S = 2, 8, 4
+    cfg, model, params, prompt, cache = _tiny_model(B, P, S)
+    bl = build_blocklist(np.arange(16).reshape(4, 4).astype(np.int32),
+                         1 << 14, k=3)
+    step = make_decode_step(model, blocklist=bl)
+    toks, _, rep = generate(model, params, prompt, cache, S,
+                            decode_step=step)
+    assert rep["blocked"].shape == (B, S)      # the step's gate is live
+    bank = FilterBank()
+    bank.register("blocklist", bl)
+    with pytest.raises(ValueError, match="without one"):
+        generate(model, params, prompt, model.init_cache(B, P + S + 1), S,
+                 bank=bank, decode_step=make_decode_step(model))
+    other = build_blocklist(np.arange(12).reshape(3, 4).astype(np.int32),
+                            1 << 14, k=3)
+    with pytest.raises(ValueError, match="different blocklist"):
+        generate(model, params, prompt, model.init_cache(B, P + S + 1), S,
+                 bank=bank, decode_step=make_decode_step(model,
+                                                         blocklist=other))
+    bank.close()

@@ -27,6 +27,22 @@ def test_serve_driver_admission_and_filters():
     assert fs["zero_fnr"]
     assert fs["habf_weighted_fpr"] <= fs["bf_weighted_fpr"]
     assert out["generated"].shape == (8, 8)
+    # both gates route through one FilterBank with live telemetry
+    tel = out["bank_telemetry"]
+    assert set(tel) == {"admission", "blocklist"}
+    assert tel["admission"]["fused_queries"] == 1
+    assert tel["admission"]["hits"] == 4 and tel["admission"]["keys"] == 8
+    assert tel["blocklist"]["keys"] == 8 * 8   # one probe per emitted token
+
+
+def test_serve_driver_derives_blocklist_window_from_n():
+    """The decode window width follows the registered blocklist's n-gram
+    order (it used to be hardcoded to 4)."""
+    from repro.launch.serve import run
+    out = run(arch="qwen3-0.6b", reduced=True, batch=2, prompt_len=16,
+              gen=6, seed=3, blocklist_n=6)
+    assert out["generated"].shape == (2, 6)
+    assert out["bank_telemetry"]["blocklist"]["keys"] == 2 * 6
 
 
 def test_serve_driver_mamba():

@@ -108,6 +108,42 @@ def test_ngram_kernel_matches_ref(B, T, n):
     assert not out_k[:, : n - 1].any()
 
 
+@pytest.mark.parametrize("use_kernel", [True, False])
+@pytest.mark.parametrize("B,T", [(0, 64), (2, 0), (0, 0), (2, 2), (1, 3)])
+def test_ngram_empty_and_short_batches(B, T, use_kernel):
+    """Bank-facing edge cases: empty batches (B=0 / T=0) and windows
+    shorter than the n-gram order (T < n) return all-False with the input
+    shape preserved, on both dispatch paths."""
+    art = build_blocklist(np.arange(12).reshape(3, 4).astype(np.int32),
+                          1 << 14, k=3)
+    out = np.asarray(query(art, jnp.zeros((B, T), jnp.int32),
+                           use_kernel=use_kernel))
+    assert out.shape == (B, T)
+    assert out.dtype == bool
+    assert not out.any()
+
+
+def test_query_keys_on_placed_artifact():
+    """query/query_keys must accept an artifact that has already been
+    device_put with a mesh sharding (the FilterBank placement path)."""
+    import jax
+    from repro.runtime.filter_bank import PlacementPolicy, place
+    rng = np.random.default_rng(21)
+    pos = _keys(rng, 4000)
+    bf = BloomFilter(1 << 16, k=4)
+    bf.insert(pos)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    placed, rep = place(bf.to_artifact(), mesh,
+                        PlacementPolicy(shard_bytes=256))
+    assert rep["sharded"] == ["words"]
+    probe = np.concatenate([pos[:500], _keys(rng, 500)])
+    host = bf.query(probe)
+    np.testing.assert_array_equal(
+        host, np.asarray(query_keys(placed, probe, use_kernel=True)))
+    np.testing.assert_array_equal(
+        host, np.asarray(query_keys(placed, probe, use_kernel=False)))
+
+
 def test_ngram_no_false_negative_property():
     rng = np.random.default_rng(42)
     tokens = rng.integers(0, 1000, (2, 256)).astype(np.int32)

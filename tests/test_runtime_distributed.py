@@ -179,6 +179,54 @@ def test_elastic_restore_across_device_counts(tmp_path):
     assert abs(out2["sum"] - saved_sum) / saved_sum < 1e-5
 
 
+def test_filter_bank_mesh_placement():
+    """FilterBank on a real 4x2 mesh: the big Bloom words table is
+    sharded over `model`, the small HABF stays fully replicated, and both
+    still answer exactly like the host filters."""
+    out = _run("""
+        from repro.core import SpaceBudget, make_filter, zipf_costs
+        from repro.runtime.filter_bank import FilterBank, PlacementPolicy
+
+        rng = np.random.default_rng(0)
+        keys = rng.choice(np.uint64(1) << np.uint64(62), 8000,
+                          replace=False).astype(np.uint64)
+        pos, neg = keys[:4000], keys[4000:]
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        bank = FilterBank(mesh=mesh)
+        # 1 MiB words table (2^23 bits) crosses the default shard threshold
+        big = make_filter("bloom", pos, space=SpaceBudget(1 << 20))
+        small = make_filter("habf", pos, neg, zipf_costs(len(neg), 1.0, 1),
+                            space=SpaceBudget.from_bits_per_key(10, len(pos)),
+                            seed=0)
+        big_art = bank.register("dedup", big)
+        small_art = bank.register("admission", small)
+        probe = np.concatenate([pos[:1000], neg[:1000]])
+        hits_big = np.asarray(bank.query("dedup", probe))
+        hits_small = np.asarray(bank.query("admission", probe))
+        shard0 = big_art.words.addressable_shards[0].data
+        out = {
+            "big_spec": str(big_art.words.sharding.spec),
+            "big_ndev": len(big_art.words.sharding.device_set),
+            "shard_frac": shard0.shape[0] / big_art.words.shape[0],
+            "small_specs": sorted({str(l.sharding.spec) for l in
+                                   jax.tree.leaves(small_art)}),
+            "parity_big": bool((hits_big == np.asarray(
+                big.query(probe))).all()),
+            "parity_small": bool((hits_small == np.asarray(
+                small.query(probe))).all()),
+            "sharded": bank.telemetry("dedup")["placement"]["sharded"],
+            "replicated_adm": bank.telemetry(
+                "admission")["placement"]["sharded"] == [],
+        }
+    """)
+    assert out["big_spec"] == "PartitionSpec('model',)"
+    assert out["big_ndev"] == 8          # replicated over data, split over model
+    assert out["shard_frac"] == 0.5      # model axis extent 2
+    assert out["small_specs"] == ["PartitionSpec()"]
+    assert out["parity_big"] and out["parity_small"]
+    assert out["sharded"] == ["words"] and out["replicated_adm"]
+
+
 def test_gpipe_matches_sequential():
     out = _run("""
         from repro.runtime.pipeline import gpipe
